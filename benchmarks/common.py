@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, CSV emission, standard problems."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Geometry, filter_projections
+from repro.core.phantom import make_dataset
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    """Median wall time (seconds) of jitted ``fn``; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+_CACHE = {}
+
+
+def ct_problem(L: int = 64, n_proj: int = 8):
+    """Standard CT bench problem: filtered projections + matrices."""
+    key = (L, n_proj)
+    if key not in _CACHE:
+        geom = Geometry().scaled(L, n_proj=n_proj)
+        projs, mats, ref = make_dataset(geom)
+        filt = np.asarray(filter_projections(projs, geom))
+        _CACHE[key] = (geom, filt, mats, ref)
+    return _CACHE[key]
+
+
+STRATEGY_OPTS = {
+    "scalar": {},
+    "gather": {},
+    "onehot": {"vox_block": 512},
+    "strip": {"chunk": 32, "band": 16, "width": 128},
+    "strip2": {"group": 8, "gband": 8, "gwidth": 64},
+}

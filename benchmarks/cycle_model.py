@@ -1,0 +1,53 @@
+"""Paper section 6.4 analogue: per-voxel cost decomposition.
+
+The paper decomposes one KNC kernel iteration into 107 cycles — 37.5
+compute + 59.2 gather + 10 L2 — concluding gather = 65% of runtime.  The
+TPU analogue decomposes the per-voxel cost of each strategy into the
+three roofline terms from the *lowered HLO* of one plane update, scaled
+to the full RabbitCT problem (512^3 x 496 projections, hardware
+constants from repro.analysis.hlo), and reports which term dominates —
+the dry-run-era equivalent of "69 of 107 cycles are gather".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo import HBM_BW, PEAK_FLOPS
+from repro.analysis.hlo_module import analyze_module
+from repro.core.backproject import STRATEGIES, backproject_one
+
+from .common import ct_problem, emit, STRATEGY_OPTS
+
+FULL_VOXELS = 512 ** 3 * 496       # medically relevant problem
+
+
+def run(L: int = 64):
+    geom, filt, mats, _ = ct_problem(L)
+    vol0 = jnp.zeros((L,) * 3, jnp.float32)
+    image = jnp.asarray(filt[0])
+    A = jnp.asarray(mats[0])
+    voxels = L ** 3
+
+    for strat in STRATEGIES:
+        opts = STRATEGY_OPTS[strat]
+        txt = jax.jit(
+            lambda v, i, a, s=strat, o=opts: backproject_one(
+                v, i, a, geom, strategy=s, **o)
+        ).lower(vol0, image, A).compile().as_text()
+        a = analyze_module(txt)
+        fl_vox = a["flops"] / voxels
+        by_vox = a["bytes"] / voxels
+        t_compute = fl_vox / PEAK_FLOPS
+        t_memory = by_vox / HBM_BW
+        dom = "compute" if t_compute > t_memory else "memory"
+        full_s = max(t_compute, t_memory) * FULL_VOXELS
+        emit(f"cycle_model/{strat}", 0.0,
+             f"flops_per_voxel={fl_vox:.0f} bytes_per_voxel={by_vox:.0f} "
+             f"dominant={dom} full_rabbitct_s_1chip={full_s:.1f} "
+             f"gups_1chip={FULL_VOXELS / full_s / 1e9:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,32 @@
+"""Paper Fig. 1 analogue: single-device back projection throughput.
+
+GUP/s (billions of voxel updates per second) per gather strategy for one
+projection on one device — the paper's single-core SIMD comparison.
+(The SMT column of Fig. 1 has no single-device analogue here; latency
+hiding is the Pallas grid pipeline, measured structurally in fig3.)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.backproject import STRATEGIES, backproject_one
+
+from .common import ct_problem, emit, time_fn, STRATEGY_OPTS
+
+
+def run(L: int = 96):
+    geom, filt, mats, _ = ct_problem(L, n_proj=4)
+    vol0 = jnp.zeros((L,) * 3, jnp.float32)
+    image = jnp.asarray(filt[0])
+    A = jnp.asarray(mats[0])
+    for strat in STRATEGIES:
+        t = time_fn(backproject_one, vol0, image, A, geom,
+                    strategy=strat, warmup=1, iters=3,
+                    **STRATEGY_OPTS[strat])
+        emit(f"fig1/{strat}", t * 1e6,
+             f"gups={L ** 3 / t / 1e9:.4f} L={L}")
+
+
+if __name__ == "__main__":
+    run()

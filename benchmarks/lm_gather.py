@@ -1,0 +1,51 @@
+"""The technique on the LM side: embedding-gather strategy comparison.
+
+Applies the paper's gather-strategy question to the assigned archs'
+vocabulary tables (52k-256k rows): XLA gather vs one-hot MXU gather vs
+the Pallas one-hot kernel, timed on this backend at a scaled-down table
+and censused at full scale (zero gather HLOs in the onehot lowering —
+checked, not assumed).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_module import analyze_module
+from repro.core.gather_ops import onehot_gather, take_gather
+from repro.kernels.gather_kernel_ops import pallas_onehot_gather
+
+from .common import emit, time_fn
+
+
+def run(V: int = 8192, D: int = 256, N: int = 2048):
+    key = jax.random.PRNGKey(0)
+    table = jax.random.normal(key, (V, D), jnp.float32)
+    ids = jax.random.randint(key, (N,), 0, V)
+
+    t_take = time_fn(jax.jit(take_gather), table, ids)
+    t_oh = time_fn(jax.jit(lambda t, i: onehot_gather(t, i, chunk=2048)),
+                   table, ids)
+    emit("lm_gather/take", t_take * 1e6, f"V={V} D={D} N={N}")
+    emit("lm_gather/onehot", t_oh * 1e6,
+         f"ratio_vs_take={t_oh / t_take:.1f}x")
+    out_p = pallas_onehot_gather(table, ids)
+    err = float(jnp.max(jnp.abs(out_p - take_gather(table, ids))))
+    emit("lm_gather/pallas_onehot", 0.0,
+         f"maxerr={err:.1e} interpret=True")
+
+    # Census at full nemotron-scale vocabulary (no timing, no alloc).
+    big = jax.ShapeDtypeStruct((256_000, 1024), jnp.bfloat16)
+    bids = jax.ShapeDtypeStruct((4096,), jnp.int32)
+    for name, fn in (("take", take_gather),
+                     ("onehot", lambda t, i: onehot_gather(t, i, 8192))):
+        txt = jax.jit(fn).lower(big, bids).compile().as_text()
+        a = analyze_module(txt)
+        emit(f"lm_gather/census_{name}", 0.0,
+             f"gather_ops={a['census'].get('gather', 0)} "
+             f"flops={a['flops']:.2e} bytes={a['bytes']:.2e}")
+
+
+if __name__ == "__main__":
+    run()

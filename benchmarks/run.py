@@ -1,0 +1,70 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Emits ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
+
+==========================  ==============================================
+module                      paper artifact
+==========================  ==============================================
+table2_op_census            Table 2 (instruction count/composition/part)
+table3_efficiency           Table 3 (+ section-5 clipping-mask claim)
+table4_gather_micro         Table 4 (gather latency vs distribution)
+fig1_single_device          Fig. 1 (single-core strategy comparison)
+fig2_scaling                Fig. 2 (full-system scaling)
+fig3_codegen                Fig. 3 (compiler vs hand-structured)
+cycle_model                 Section 6.4 (per-iteration cycle breakdown)
+quality                     RabbitCT accuracy score (PSNR)
+lm_gather                   the technique on the assigned LM archs
+==========================  ==============================================
+
+``python -m benchmarks.run [--only name]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (ct_hillclimb, cycle_model, fig1_single_device,
+               fig2_scaling, fig3_codegen, lm_gather, moe_dispatch,
+               quality, table2_op_census, table3_efficiency,
+               table4_gather_micro)
+
+MODULES = [
+    ("table2_op_census", table2_op_census),
+    ("table3_efficiency", table3_efficiency),
+    ("table4_gather_micro", table4_gather_micro),
+    ("fig1_single_device", fig1_single_device),
+    ("fig2_scaling", fig2_scaling),
+    ("fig3_codegen", fig3_codegen),
+    ("cycle_model", cycle_model),
+    ("quality", quality),
+    ("lm_gather", lm_gather),
+    ("ct_hillclimb", ct_hillclimb),
+    ("moe_dispatch", moe_dispatch),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    n_fail = 0
+    for name, mod in MODULES:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            mod.run()
+            print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001 — keep the harness going
+            n_fail += 1
+            print(f"# {name} FAILED:")
+            traceback.print_exc()
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

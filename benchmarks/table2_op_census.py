@@ -1,0 +1,75 @@
+"""Paper Table 2 analogue: op count & composition per algorithm part.
+
+The paper counts x86 instructions per kernel part (memory / shuffle /
+arithmetic) for each SIMD ISA.  Here we count optimised-HLO instructions
+(loop-weighted) per class for each TPU gather strategy, for one plane
+update.  The paper's qualitative findings to check against:
+
+* Part 1 is cheap and identical across strategies (streaming math);
+* Part 2 dominates and differs wildly: ``gather`` emits gather HLOs
+  ("hardware gather"), ``onehot``/``strip`` emit zero gathers but pay in
+  dot/select arithmetic (MXU as texture unit);
+* zero-padding removes all per-tap conditionals (no select-on-bounds in
+  the gather path).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.hlo_module import analyze_module
+from repro.core.backproject import (GeomStatic, STRATEGIES, _pad_image,
+                                    _sample, accumulate, plane_coords)
+
+from .common import ct_problem, emit, STRATEGY_OPTS
+
+
+def _census(fn, *args):
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return analyze_module(txt)
+
+
+def run(L: int = 64):
+    geom, filt, mats, _ = ct_problem(L)
+    gs = GeomStatic.of(geom)
+    image = jnp.asarray(filt[0])
+    padded = _pad_image(image)
+    A = jnp.asarray(mats[0])
+    z = jnp.int32(L // 2)
+
+    # Part 1 alone (identical for every strategy).
+    a1 = _census(lambda A, z: plane_coords(A, gs, z), A, z)
+    c = a1["census"]
+    emit("table2/part1/all", 0.0,
+         f"mem={c.get('memory', 0)} shuf={c.get('shuffle', 0)} "
+         f"arith={c.get('arith', 0)} gather={c.get('gather', 0)} "
+         f"total={c.get('total', 0)}")
+
+    ix, iy, w = plane_coords(A, gs, z)
+    plane = jnp.zeros((L, L), jnp.float32)
+
+    for strat in STRATEGIES:
+        opts = STRATEGY_OPTS[strat]
+
+        def part2(image, padded, ix, iy):
+            return _sample(strat, image, padded, ix, iy, gs, dict(opts))
+
+        a2 = _census(part2, image, padded, ix, iy)
+        c2 = a2["census"]
+        gather_ops = c2.get("gather", 0)
+        emit(f"table2/part2/{strat}", 0.0,
+             f"mem={c2.get('memory', 0)} shuf={c2.get('shuffle', 0)} "
+             f"arith={c2.get('arith', 0)} gather={gather_ops} "
+             f"total={c2.get('total', 0)} flops={a2['flops']:.2e}")
+
+    val = _sample("gather", image, padded, ix, iy, gs, {})
+    a3 = _census(lambda p, v, w: accumulate(p, v, w), plane, val, w)
+    c3 = a3["census"]
+    emit("table2/part3/all", 0.0,
+         f"mem={c3.get('memory', 0)} shuf={c3.get('shuffle', 0)} "
+         f"arith={c3.get('arith', 0)} total={c3.get('total', 0)}")
+
+
+if __name__ == "__main__":
+    run()

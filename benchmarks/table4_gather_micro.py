@@ -1,0 +1,80 @@
+"""Paper Table 4 analogue: gather cost vs element distribution.
+
+The paper microbenchmarks ``vgatherdps`` latency as a function of how
+many of the 16 gathered elements share a cache line (16/8/4/2/1 per CL).
+The TPU re-parameterisation: gather N elements whose indices fall ``d``
+per 128-element tile row (the VMEM lane tile) — the fewer per row, the
+more rows the gather emulation must touch.
+
+Measured on this backend: XLA gather (``take``) vs one-hot MXU gather vs
+strip block-load, same index distributions.  Derived column reports the
+modeled TPU cost terms (bytes touched for take at tile granularity,
+flops for onehot), which is what EXPERIMENTS.md §Perf quotes — the
+measured CPU times validate the *ordering*, the model gives the TPU
+numbers.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gather_ops import onehot_gather, take_gather
+
+from .common import emit, time_fn
+
+ROW = 128      # lane-tile width
+
+
+def _indices(n: int, per_row: int, rows: int, seed=0) -> np.ndarray:
+    """n indices spread so ``per_row`` land in each touched row."""
+    rng = np.random.default_rng(seed)
+    n_rows_touched = n // per_row
+    row_ids = rng.permutation(rows)[:n_rows_touched]
+    idx = []
+    for r in row_ids:
+        cols = rng.choice(ROW, size=per_row, replace=False)
+        idx.extend(r * ROW + cols)
+    return np.asarray(idx[:n], np.int32)
+
+
+def _strip_gather(table, ids, per_row):
+    """Block-load analogue: slice whole rows, select within."""
+    rows = ids // ROW
+    cols = ids % ROW
+    urows = rows.reshape(-1, per_row)[:, 0]       # one slice per row
+    blocks = jax.vmap(
+        lambda r: jax.lax.dynamic_slice(table, (r * ROW,), (ROW,)))(urows)
+    sel = jax.nn.one_hot(cols.reshape(-1, per_row), ROW,
+                         dtype=table.dtype)
+    return jnp.einsum("npk,nk->np", sel,
+                      blocks).reshape(-1)
+
+
+def run(n: int = 4096, rows: int = 512):
+    table1d = jnp.arange(rows * ROW, dtype=jnp.float32)
+    table2d = table1d.reshape(rows * ROW, 1)
+
+    take_j = jax.jit(lambda t, i: take_gather(t, i))
+    onehot_j = jax.jit(lambda t, i: onehot_gather(t, i, chunk=2048))
+
+    for per_row in (16, 8, 4, 2, 1):
+        ids = jnp.asarray(_indices(n, per_row, rows))
+        t_take = time_fn(take_j, table1d, ids)
+        t_oh = time_fn(onehot_j, table2d, ids)
+        strip_j = jax.jit(lambda t, i, p=per_row: _strip_gather(t, i, p))
+        t_strip = time_fn(strip_j, table1d, ids)
+        # TPU model: take touches ceil(n/per_row) tile-rows of 512B;
+        # onehot does 2*n*V flops on the MXU.
+        rows_touched = n // per_row
+        model_bytes = rows_touched * ROW * 4
+        model_flops = 2 * n * rows * ROW
+        emit(f"table4/per_row={per_row}", t_take * 1e6,
+             f"take_us={t_take * 1e6:.1f} onehot_us={t_oh * 1e6:.1f} "
+             f"strip_us={t_strip * 1e6:.1f} "
+             f"tpu_take_bytes={model_bytes} tpu_onehot_flops={model_flops}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""End-to-end driver: the full RabbitCT-style benchmark run.
+
+Synthesises a cone-beam scan of the 3-D Shepp-Logan phantom, applies FDK
+preprocessing (cosine + Parker + ramp), back-projects every projection
+with the production ``strip2`` strategy, and scores the reconstruction
+against the analytic reference — the complete pipeline the paper's
+kernel sits inside, plus a slice dump as ASCII art.
+
+    PYTHONPATH=src python examples/reconstruct_phantom.py --L 48 --proj 96
+"""
+
+import argparse
+import dataclasses
+import math
+import time
+
+import numpy as np
+
+from repro.core import (Geometry, filter_projections, quality_report,
+                        reconstruct)
+from repro.core.clipping import line_clip_exact
+from repro.core.phantom import make_dataset
+
+
+def ascii_slice(sl, width=64):
+    ramp = " .:-=+*#%@"
+    sl = np.asarray(sl, np.float64)
+    lo, hi = np.percentile(sl, 2), np.percentile(sl, 98)
+    sl = np.clip((sl - lo) / max(hi - lo, 1e-9), 0, 1)
+    step = max(1, sl.shape[0] // 32)
+    rows = []
+    for r in sl[::step]:
+        rows.append("".join(
+            ramp[int(v * (len(ramp) - 1))] for v in r[::step]))
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--L", type=int, default=48)
+    ap.add_argument("--proj", type=int, default=96)
+    ap.add_argument("--strategy", default="strip2")
+    ap.add_argument("--full-sweep", action="store_true",
+                    help="360-degree scan instead of the 200-degree "
+                         "C-arm short scan")
+    args = ap.parse_args()
+
+    geom = Geometry().scaled(args.L, n_proj=args.proj)
+    if args.full_sweep:
+        geom = dataclasses.replace(geom, sweep=2 * math.pi)
+    print(f"scanning: {geom.L}^3, {geom.n_proj} views, "
+          f"sweep={math.degrees(geom.sweep):.0f} deg")
+    t0 = time.time()
+    projs, mats, ref = make_dataset(geom)
+    print(f"  analytic forward projection: {time.time() - t0:.1f}s")
+
+    t0 = time.time()
+    filt = filter_projections(projs, geom)
+    print(f"  FDK filter (+Parker short-scan weights): "
+          f"{time.time() - t0:.1f}s")
+
+    clip_voxels = sum(
+        line_clip_exact(geom, np.asarray(m, np.float64)).voxels
+        for m in mats[:: max(1, len(mats) // 8)])
+    total = geom.L ** 3 * max(1, len(mats) // 8) * 8 // 8
+    print(f"  clipping mask: {clip_voxels / (geom.L ** 3 * 8):.1%} of "
+          "voxels contribute (sampled)")
+
+    t0 = time.time()
+    vol = reconstruct(filt, mats, geom, strategy=args.strategy)
+    vol.block_until_ready()
+    dt = time.time() - t0
+    gups = geom.L ** 3 * geom.n_proj / dt / 1e9
+    print(f"  back projection [{args.strategy}]: {dt:.1f}s = "
+          f"{gups:.4f} GUP/s")
+
+    q = quality_report(vol, ref)
+    print(f"  quality: PSNR(ROI) = {q['psnr_roi_db']:.2f} dB, "
+          f"MSE = {q['mse_roi']:.5f}")
+    print("\ncentral slice (reconstruction):")
+    print(ascii_slice(np.asarray(vol)[geom.L // 2]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Compiled-artifact analysis: HLO op census, collectives, roofline."""
+
+from .hlo import (  # noqa: F401
+    collective_bytes,
+    op_census,
+    parse_shape_bytes,
+    roofline_terms,
+)

@@ -1,0 +1,385 @@
+"""While-aware HLO module analysis: loop-weighted flops/bytes/collectives.
+
+``compiled.cost_analysis()`` traverses each computation once, so anything
+inside a ``while`` body (every ``lax.scan``: layer stacks, attention KV
+blocks, SSM chunk scans, grad accumulation) is undercounted by its trip
+count — for a 94-layer scanned model that is a ~94x error.  XLA:CPU
+records ``backend_config={"known_trip_count":{"n":...}}`` on every while
+it can bound; this module parses the optimised HLO into its computation
+graph (with a per-computation symbol table, since operand shapes are not
+inlined) and produces **loop-weighted** totals:
+
+* ``flops``        — 2*out*K per dot/convolution, trip-count multiplied,
+                     plus 1/elem at fusion boundaries (the minor term);
+* ``bytes``        — operands+outputs per top-level instruction (same
+                     convention as XLA "bytes accessed"; fusion internals
+                     excluded — they live in registers);
+* ``collectives``  — per-kind bytes moved (all-reduce doubled: ring =
+                     reduce-scatter + all-gather), trip-count multiplied;
+* ``census``       — paper-style op classes (Table 2 analogue).
+
+Validated in ``tests/test_hlo_analysis.py``: loop-weighted counts on a
+scanned model equal plain counts on its unrolled twin.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter
+from dataclasses import dataclass, field
+
+from .hlo import _CLASS, _DTYPE_BYTES, COLLECTIVES
+
+__all__ = ["HloModule", "analyze_module"]
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%([\w\.\-]+)\s*\(.*\{\s*$")
+_LHS = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_NAME = re.compile(r"%([\w\.\-]+)")
+_CALLED = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_DOT_DIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPCODE = re.compile(r"^\s*([a-z0-9\-\$_]+)\(")
+
+_SKIP_OPS = {"tuple", "get-tuple-element", "parameter", "constant",
+             "bitcast", "after-all", "partition-id", "replica-id"}
+
+
+def _shapes_of(segment: str):
+    """[(dtype, dims-list)] for every shape literal in ``segment``."""
+    out = []
+    for dt, dims in _SHAPE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _bytes_elems(shapes):
+    b = e = 0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        b += n * _DTYPE_BYTES[dt]
+        e += n
+    return b, e
+
+
+@dataclass
+class Instr:
+    name: str
+    opcode: str
+    out_shapes: list
+    operands: list
+    tail: str            # text after the operand list (attrs, metadata)
+    op_segment: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # %name -> shape list
+
+
+def _split_op(rhs: str):
+    """Split '<type> opcode(operands), attrs' robustly."""
+    # Find the opcode: last token before the first '(' that is not part
+    # of a shape literal.  Walk tokens.
+    m = re.search(r"([a-z][a-z0-9\-\$_]*)\(", rhs)
+    if not m:
+        return None
+    op = m.group(1)
+    out_seg = rhs[:m.start()]
+    rest = rhs[m.end():]
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                return op, out_seg, rest[:i], rest[i + 1:]
+    return op, out_seg, rest, ""
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.comps: dict[str, Computation] = {}
+        self.entry: str | None = None
+        cur: Computation | None = None
+        for raw in text.splitlines():
+            s = raw.strip()
+            hdr = _COMP_HDR.match(s)
+            if hdr:
+                cur = Computation(hdr.group(2), bool(hdr.group(1)))
+                self.comps[cur.name] = cur
+                if cur.is_entry:
+                    self.entry = cur.name
+                continue
+            if s == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            lm = _LHS.match(s)
+            if not lm:
+                continue
+            name, rhs = lm.group(1), lm.group(2)
+            sp = _split_op(rhs)
+            if sp is None:
+                continue
+            op, out_seg, opnd_seg, tail = sp
+            out_shapes = _shapes_of(out_seg)
+            # operand names only from the operand segment
+            operands = _NAME.findall(opnd_seg)
+            cur.shapes[name] = out_shapes
+            cur.instrs.append(Instr(name, op, out_shapes, operands,
+                                    tail, opnd_seg,
+                                    is_root=s.startswith("ROOT ")))
+        self._memo: dict[str, Counter] = {}
+
+    # ------------------------------------------------------------------
+    def _instr_cost(self, comp: Computation, ins: Instr) -> Counter:
+        c: Counter = Counter()
+        if ins.opcode in _SKIP_OPS:
+            return c
+        out_b, out_e = _bytes_elems(ins.out_shapes)
+        in_shapes = []
+        for o in ins.operands:
+            in_shapes.extend(comp.shapes.get(o, []))
+        in_b, in_e = _bytes_elems(in_shapes)
+        # Indexing ops move only the slice, not the addressable operand:
+        # a scan writing its ys stack via dynamic-update-slice touches
+        # update-sized bytes per step, not the whole stack (counting the
+        # full buffer overstated scan-heavy models ~40x — §Perf metric
+        # note in EXPERIMENTS.md).
+        if ins.opcode == "dynamic-update-slice":
+            upd = (_bytes_elems(comp.shapes.get(ins.operands[1], []))[0]
+                   if len(ins.operands) > 1 else out_b)
+            c["bytes"] += 2 * upd
+        elif ins.opcode in ("dynamic-slice", "slice", "broadcast",
+                            "iota", "reshape", "transpose", "reverse"):
+            c["bytes"] += 2 * out_b
+        elif ins.opcode == "gather":
+            c["bytes"] += 2 * out_b
+            c["gather_bytes"] += out_b     # serialised-access bytes
+        elif ins.opcode == "scatter":
+            upd = (_bytes_elems(comp.shapes.get(ins.operands[-1], []))[0]
+                   if ins.operands else out_b)
+            c["bytes"] += 3 * upd          # read+write region + updates
+            c["gather_bytes"] += upd
+        else:
+            c["bytes"] += out_b + in_b
+
+        base = ins.opcode.removesuffix("-start")
+        if base in COLLECTIVES and not ins.opcode.endswith("-done"):
+            nbytes = out_b if base != "all-reduce" else 2 * out_b
+            c[f"coll_{base}"] += nbytes
+            c["coll_total"] += nbytes
+
+        if ins.opcode == "fusion":
+            # Bytes handled at the call site via _fusion_bytes (loads/
+            # stores are slice-aware there); undo the boundary count.
+            c["bytes"] -= out_b + in_b
+
+        if ins.opcode in ("dot", "convolution") or \
+                (ins.opcode == "custom-call" and "matmul" in ins.tail):
+            lhs_dims = (comp.shapes.get(ins.operands[0], [("f32", [])])
+                        [0][1] if ins.operands else [])
+            md = _DOT_DIMS.search(ins.tail)
+            if md and md.group(1):
+                k = 1
+                for d in md.group(1).split(","):
+                    di = int(d)
+                    k *= lhs_dims[di] if di < len(lhs_dims) else 1
+            else:
+                # convolution / opaque matmul: infer K from elem counts.
+                k = max(1, in_e // max(out_e, 1))
+            c["flops"] += 2 * out_e * k
+        elif ins.opcode == "fusion":
+            c["flops"] += out_e
+
+        for cls, names in _CLASS.items():
+            if ins.opcode in names:
+                c[f"census_{cls}"] += 1
+                break
+        else:
+            c["census_other"] += 1
+        c["census_total"] += 1
+        return c
+
+    _SLICING = ("dynamic-slice", "gather", "slice")
+
+    def _fusion_bytes(self, name: str) -> int:
+        """HBM traffic model of one fusion computation.
+
+        Loads: each parameter counts full-size unless *all* its uses are
+        slicing ops, in which case the slice outputs count (the fused
+        loop only touches those addresses).  Stores: the root counts its
+        output, except a root dynamic-update-slice stores only the
+        update (in-place loop-carried buffers).
+        """
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0, 0
+        uses: dict[str, list] = {}
+        for ins in comp.instrs:
+            for o in ins.operands:
+                uses.setdefault(o, []).append(ins)
+        by_name = {i.name: i for i in comp.instrs}
+        total = 0
+        gather_b = 0
+        for ins in comp.instrs:
+            if ins.opcode != "parameter":
+                continue
+            u = uses.get(ins.name, [])
+            if u and all(x.opcode in self._SLICING for x in u):
+                for x in u:
+                    b = _bytes_elems(x.out_shapes)[0]
+                    total += b
+                    if x.opcode == "gather":
+                        gather_b += b
+            else:
+                total += _bytes_elems(ins.out_shapes)[0]
+
+        def store_bytes(instr):
+            if instr.opcode == "dynamic-update-slice" \
+                    and len(instr.operands) > 1:
+                upd = comp.shapes.get(instr.operands[1], [])
+                return _bytes_elems(upd)[0]
+            return _bytes_elems(instr.out_shapes)[0]
+
+        roots = [i for i in comp.instrs if i.is_root]
+        for root in roots:
+            if root.opcode == "tuple":
+                for o in root.operands:
+                    src = by_name.get(o)
+                    total += store_bytes(src) if src is not None else 0
+            else:
+                total += store_bytes(root)
+        return total, gather_b
+
+    def _comp_cost(self, name: str) -> Counter:
+        if name in self._memo:
+            return self._memo[name]
+        self._memo[name] = Counter()      # cycle guard
+        comp = self.comps.get(name)
+        total: Counter = Counter()
+        if comp is None:
+            self._memo[name] = total
+            return total
+        for ins in comp.instrs:
+            total.update(self._instr_cost(comp, ins))
+            if ins.opcode == "while":
+                called = _CALLED.findall(ins.tail)
+                m = _TRIP.search(ins.tail)
+                trip = int(m.group(1)) if m else 1
+                for sub in called:
+                    for k, v in self._comp_cost(sub).items():
+                        total[k] += v * trip
+            elif ins.opcode in ("call", "custom-call", "async-start"):
+                for sub in _CALLED.findall(ins.tail):
+                    total.update(self._comp_cost(sub))
+            elif ins.opcode == "conditional":
+                mb = _BRANCHES.search(ins.tail)
+                if mb:
+                    # Upper bound: assume the costliest branch.
+                    costs = [self._comp_cost(b.strip().lstrip("%"))
+                             for b in mb.group(1).split(",") if b.strip()]
+                    if costs:
+                        best = max(costs, key=lambda cc: cc["flops"]
+                                   + cc["bytes"])
+                        total.update(best)
+            elif ins.opcode == "fusion":
+                # Bytes: slice-aware loads/stores of the fused loop
+                # (a fused dynamic-slice reads its slice, not its whole
+                # operand; a fused in-place update-slice root stores the
+                # update).  Census: the fused ops are the "instructions"
+                # of the loop body (a gather fused into a loop is still
+                # a gather).
+                for sub in _CALLED.findall(ins.tail):
+                    fb, gb = self._fusion_bytes(sub)
+                    total["bytes"] += fb
+                    total["gather_bytes"] += gb
+                    for k, v in self._comp_cost(sub).items():
+                        if k.startswith("census_"):
+                            total[k] += v
+            # reduce/scatter to_apply: scalar per-element bodies,
+            # covered by the boundary cost — intentionally not recursed.
+        self._memo[name] = total
+        return total
+
+    def analyze(self) -> dict:
+        if self.entry is None:
+            raise ValueError("no ENTRY computation found")
+        c = self._comp_cost(self.entry)
+        coll = {k.removeprefix("coll_"): v for k, v in c.items()
+                if k.startswith("coll_")}
+        coll.setdefault("total", 0)
+        census = {k.removeprefix("census_"): v for k, v in c.items()
+                  if k.startswith("census_")}
+        return {
+            "flops": float(c["flops"]),
+            "bytes": float(c["bytes"]),
+            # Bytes moved by gather/scatter element access: on TPU these
+            # serialise (no vector gather hardware — DESIGN.md §2) and
+            # run at a fraction of stream bandwidth; consumers derate
+            # them (GATHER_DERATE in repro.analysis.hlo).
+            "gather_bytes": float(c["gather_bytes"]),
+            "collectives": {k.replace("coll_", ""): v
+                            for k, v in coll.items()},
+            "census": census,
+        }
+
+
+    # ------------------------------------------------------------------
+    def multipliers(self) -> dict[str, int]:
+        """Loop-trip multiplier per computation (reachable from entry)."""
+        mult = {self.entry: 1}
+        stack = [self.entry]
+        while stack:
+            name = stack.pop()
+            comp = self.comps.get(name)
+            if comp is None:
+                continue
+            for ins in comp.instrs:
+                subs = _CALLED.findall(ins.tail)
+                if ins.opcode == "while":
+                    m = _TRIP.search(ins.tail)
+                    trip = int(m.group(1)) if m else 1
+                else:
+                    trip = 1
+                for sub in subs:
+                    if sub in self.comps:
+                        add = mult[name] * trip
+                        if mult.get(sub, 0) < add:
+                            mult[sub] = add
+                            stack.append(sub)
+        return mult
+
+    def top_instructions(self, kinds=None, n=15):
+        """Largest loop-weighted contributors: (weighted_bytes, opcode,
+        raw_bytes, multiplier, computation, instr-name)."""
+        mult = self.multipliers()
+        rows = []
+        for cname, m in mult.items():
+            comp = self.comps[cname]
+            for ins in comp.instrs:
+                base = ins.opcode.removesuffix("-start")
+                if kinds and base not in kinds:
+                    continue
+                b, _ = _bytes_elems(ins.out_shapes)
+                w = b * (2 if base == "all-reduce" else 1) * m
+                rows.append((w, base, b, m, cname, ins.name))
+        rows.sort(reverse=True)
+        return rows[:n]
+
+
+def analyze_module(hlo_text: str) -> dict:
+    """Loop-weighted per-device analysis of one optimised HLO module."""
+    return HloModule(hlo_text).analyze()

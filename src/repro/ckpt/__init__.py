@@ -1,0 +1,7 @@
+"""Checkpointing: atomic sharded save/restore, async writer, elastic resume."""
+
+from .checkpoint import (  # noqa: F401
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)

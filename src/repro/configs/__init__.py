@@ -1,0 +1,4 @@
+"""Architecture registry: --arch <id> resolves here."""
+
+from .base import SHAPES, ModelConfig, ShapeConfig  # noqa: F401
+from .registry import ARCHS, get_arch  # noqa: F401

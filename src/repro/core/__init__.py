@@ -1,0 +1,43 @@
+"""The paper's contribution: cone-beam back projection + gather strategies.
+
+Public surface re-exported here; see DESIGN.md for the x86->TPU mapping.
+"""
+
+from .backproject import (  # noqa: F401
+    STRATEGIES,
+    GeomStatic,
+    accumulate,
+    backproject_one,
+    backproject_plane,
+    plane_coords,
+    reconstruct,
+    sample_gather,
+    sample_onehot,
+    sample_scalar,
+    sample_strip,
+    sample_strip2,
+)
+from .clipping import (  # noqa: F401
+    LinePlan,
+    StripPlan,
+    line_clip_conservative,
+    line_clip_exact,
+    pad_projection,
+    plan_strips,
+)
+from .filtering import filter_projections, ramlak_kernel  # noqa: F401
+from .gather_ops import gather, onehot_gather, take_gather  # noqa: F401
+from .geometry import (  # noqa: F401
+    Geometry,
+    default_geometry,
+    projection_matrices,
+    projection_matrix,
+)
+from .phantom import (  # noqa: F401
+    Ellipsoid,
+    forward_project,
+    make_dataset,
+    shepp_logan_3d,
+    voxelize,
+)
+from .quality import psnr, quality_report, roi_mask  # noqa: F401

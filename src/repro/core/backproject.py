@@ -1,0 +1,441 @@
+"""Voxel-driven cone-beam back projection — the paper's kernel, in JAX.
+
+Listing 1 of the paper splits the line-update kernel into three parts; we
+keep that structure so the HLO op census (``benchmarks/table2``) can be
+reported per part:
+
+* **Part 1** (:func:`plane_coords`): VCS->WCS->ICS transform +
+  de-homogenisation.  Streaming arithmetic; trivially vectorizable on any
+  SIMD machine — and on the TPU VPU.
+* **Part 2** (``sample_*``): fetch the four bilinear taps and blend them.
+  The scattered-access part; each ``sample_*`` function is one point in the
+  x86-ISA -> TPU design-space mapping (see DESIGN.md §2):
+
+  ========== ==========================================================
+  strategy    TPU mechanism (x86 analogue)
+  ========== ==========================================================
+  ``scalar``  per-tap bounds-checked loads (scalar baseline, Listing 1)
+  ``gather``  XLA gather HLO on a zero-padded image (AVX2/IMCI
+              ``vgatherdps``)
+  ``onehot``  full one-hot matmuls on the MXU (GPU texture-unit
+              emulation; the systolic array performs the interpolation)
+  ``strip``   per-chunk strip block load + banded one-hot
+              (SSE/AVX pairwise loads + in-register shuffles)
+  ``strip2``  two-level: strip -> per-8-voxel micro-window + VPU selects
+              (beyond-paper refinement; the Pallas kernel's scheme)
+  ========== ==========================================================
+
+* **Part 3** (:func:`accumulate`): inverse-square-law weighting + voxel
+  update.  Streaming; includes the paper's reciprocal trick (one
+  reciprocal replaces three divides).
+
+All strategies implement *identical* semantics — floor-based bilinear
+interpolation with zero outside the detector — and are cross-validated in
+``tests/test_backproject.py``.  (The reference C code's ``(int)`` cast
+truncates toward zero, which *extrapolates* for ``ix in (-1, 0)``; we use
+mathematically correct ``floor`` semantics everywhere.  The difference is
+confined to a sub-pixel border band and is invisible in the quality
+metric.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import Geometry
+
+__all__ = [
+    "STRATEGIES",
+    "GeomStatic",
+    "plane_coords",
+    "sample_scalar",
+    "sample_gather",
+    "sample_onehot",
+    "sample_strip",
+    "sample_strip2",
+    "accumulate",
+    "backproject_plane",
+    "backproject_one",
+    "reconstruct",
+]
+
+STRATEGIES = ("scalar", "gather", "onehot", "strip", "strip2")
+
+_EPS_W = 1e-6
+
+
+class GeomStatic(NamedTuple):
+    """The static scalars a kernel needs (hashable -> jit-static)."""
+
+    L: int
+    n_u: int
+    n_v: int
+    O: float
+    MM: float
+
+    @classmethod
+    def of(cls, geom: Geometry) -> "GeomStatic":
+        return cls(L=geom.L, n_u=geom.n_u, n_v=geom.n_v,
+                   O=float(geom.O), MM=float(geom.MM))
+
+
+# ----------------------------------------------------------------------
+# Part 1 — geometry (streaming arithmetic)
+# ----------------------------------------------------------------------
+
+def plane_coords(A, gs: GeomStatic, z, *, use_reciprocal: bool = True):
+    """ICS coordinates for one z-plane: ``(ix, iy, w)`` each ``(L, L)``.
+
+    ``[y, x]`` index order.  The single reciprocal replaces the two divides
+    of Listing 1 lines 14-15 (paper section 5.1: "replace the divide with a
+    reciprocal instruction"); it is also reused by Part 3 for the ``1/w^2``
+    weight, saving a third divide.
+    """
+    A = jnp.asarray(A, dtype=jnp.float32)
+    coords = gs.O + jnp.arange(gs.L, dtype=jnp.float32) * gs.MM
+    wx = coords[None, :]                      # (1, L)  varies along x
+    wy = coords[:, None]                      # (L, 1)  varies along y
+    wz = gs.O + z.astype(jnp.float32) * gs.MM if hasattr(z, "dtype") \
+        else gs.O + float(z) * gs.MM
+    u = wx * A[0, 0] + wy * A[0, 1] + wz * A[0, 2] + A[0, 3]
+    v = wx * A[1, 0] + wy * A[1, 1] + wz * A[1, 2] + A[1, 3]
+    w = wx * A[2, 0] + wy * A[2, 1] + wz * A[2, 2] + A[2, 3]
+    if use_reciprocal:
+        r = jnp.where(w > _EPS_W, 1.0 / w, 0.0)
+        return u * r, v * r, w
+    return u / w, v / w, w
+
+
+def _taps(ix, iy):
+    """Floor taps and interpolation weights (Listing 1 lines 17-21)."""
+    fx = jnp.floor(ix)
+    fy = jnp.floor(iy)
+    iix = fx.astype(jnp.int32)
+    iiy = fy.astype(jnp.int32)
+    return iix, iiy, ix - fx, iy - fy
+
+
+# ----------------------------------------------------------------------
+# Part 2 — the four-tap fetch + bilinear blend (scattered access)
+# ----------------------------------------------------------------------
+
+def sample_scalar(image, ix, iy, gs: GeomStatic):
+    """Listing-1 transliteration: four bounds-checked loads per voxel.
+
+    The oracle for every other strategy.  ``image`` is the *unpadded*
+    ``(n_v, n_u)`` projection; each tap is masked exactly like the four
+    ``if`` statements of Listing 1 lines 24-36.
+    """
+    iix, iiy, sx, sy = _taps(ix, iy)
+
+    def tap(r, c):
+        ok = (r >= 0) & (r < gs.n_v) & (c >= 0) & (c < gs.n_u)
+        rc = jnp.clip(r, 0, gs.n_v - 1)
+        cc = jnp.clip(c, 0, gs.n_u - 1)
+        return jnp.where(ok, image[rc, cc], 0.0)
+
+    valbl = tap(iiy, iix)
+    valbr = tap(iiy, iix + 1)
+    valtl = tap(iiy + 1, iix)
+    valtr = tap(iiy + 1, iix + 1)
+    valb = (1.0 - sx) * valbl + sx * valbr
+    valt = (1.0 - sx) * valtl + sx * valtr
+    return (1.0 - sy) * valb + sy * valt
+
+
+def sample_gather(padded, ix, iy, gs: GeomStatic):
+    """Hardware-gather analogue: four XLA gathers on the padded image.
+
+    ``padded`` is the 1-pixel zero-padded ``(n_v + 2, n_u + 2)`` buffer
+    (paper section 5.1.1: zero padding beats mask registers).  Indices are
+    clamped into the padded buffer; every clamped-out tap lands on a zero
+    border cell, so no per-tap conditional survives — exactly the paper's
+    "gather everything unconditionally" scheme.
+    """
+    iix, iiy, sx, sy = _taps(ix, iy)
+    r = jnp.clip(iiy + 1, 0, gs.n_v + 1)
+    r2 = jnp.clip(iiy + 2, 0, gs.n_v + 1)
+    c = jnp.clip(iix + 1, 0, gs.n_u + 1)
+    c2 = jnp.clip(iix + 2, 0, gs.n_u + 1)
+    valbl = padded[r, c]
+    valbr = padded[r, c2]
+    valtl = padded[r2, c]
+    valtr = padded[r2, c2]
+    valb = (1.0 - sx) * valbl + sx * valbr
+    valt = (1.0 - sx) * valtl + sx * valtr
+    return (1.0 - sy) * valb + sy * valt
+
+
+def sample_onehot(padded, ix, iy, gs: GeomStatic, *, vox_block: int = 512):
+    """Texture-unit emulation: bilinear sampling as two one-hot matmuls.
+
+    ``val[p] = rowsel[p, :] @ padded @ colsel[p, :]`` where ``rowsel``
+    carries the vertical interpolation weights on taps ``iiy``/``iiy+1``
+    and ``colsel`` the horizontal ones.  The MXU performs the
+    interpolation, like a GPU texture unit — at the cost of ``2*R + 4*W``
+    flops per voxel.  Out-of-range taps produce all-zero one-hot rows, so
+    the zero-outside semantics are *exact* with no clamping at all.
+    """
+    R, W = gs.n_v + 2, gs.n_u + 2
+    shape = ix.shape
+    n = int(np.prod(shape))
+    vb = min(vox_block, n)
+    pad_to = (-n) % vb
+
+    iix, iiy, sx, sy = _taps(ix, iy)
+    flat = [jnp.pad(a.reshape(-1), (0, pad_to)).reshape(-1, vb)
+            for a in (iix, iiy, sx, sy)]
+    iixf, iiyf, sxf, syf = flat
+
+    riota = jax.lax.broadcasted_iota(jnp.int32, (vb, R), 1)
+    ciota = jax.lax.broadcasted_iota(jnp.int32, (vb, W), 1)
+
+    def block(args):
+        iixb, iiyb, sxb, syb = args
+        rr = iiyb[:, None] + 1                  # padded row of lower tap
+        cc = iixb[:, None] + 1
+        rowsel = ((riota == rr) * (1.0 - syb[:, None])
+                  + (riota == rr + 1) * syb[:, None])
+        colsel = ((ciota == cc) * (1.0 - sxb[:, None])
+                  + (ciota == cc + 1) * sxb[:, None])
+        rowmix = rowsel.astype(padded.dtype) @ padded     # (vb, W)
+        return jnp.sum(rowmix * colsel, axis=-1)
+
+    vals = jax.lax.map(block, (iixf, iiyf, sxf, syf))
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+def _divisor_at_most(n: int, k: int) -> int:
+    """Largest divisor of ``n`` that is <= ``k`` (memory-block sizing)."""
+    k = max(1, min(k, n))
+    while n % k:
+        k -= 1
+    return k
+
+
+def _strip_bounds(idx, lo_clip, hi_clip, pad_origin_max):
+    """Chunk-min tap origin, clamped into the padded image.
+
+    The lowest contributing tap of the chunk sits at padded coordinate
+    ``floor(min(idx)) + 1``; using ``floor(min(idx))`` as the origin leaves
+    one margin row/col below it (+1 pad and -1 margin cancel).
+    """
+    clipped = jnp.clip(idx, lo_clip, hi_clip)
+    lo = jnp.floor(jnp.min(clipped, axis=-1)).astype(jnp.int32)
+    return jnp.clip(lo, 0, pad_origin_max)
+
+
+def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
+                 band: int = 16, width: int = 512,
+                 strips_per_block: int = 64):
+    """Structured block loads: the fastrabbit "pairwise loads" analogue.
+
+    Voxel lines are cut into x-chunks; per chunk one contiguous
+    ``(band, width)`` strip is block-loaded (``dynamic_slice``) and the
+    four taps are selected from it with a banded one-hot — zero XLA
+    gathers of individual elements.  The strip origin is the chunk-min tap
+    coordinate (exact: no monotonicity assumption needed in-graph), so all
+    contributing taps are in-band by construction; out-of-band one-hot rows
+    are identically zero, preserving exact zero-outside semantics.
+    """
+    L = gs.L
+    assert ix.shape == (L, L)
+    chunk = _divisor_at_most(L, chunk)
+    ns = L // chunk
+    band = min(band, gs.n_v + 2)
+    width = min(width, gs.n_u + 2)
+
+    def reshard(a):
+        return a.reshape(L * ns, chunk)
+
+    ixs, iys = reshard(ix), reshard(iy)
+    iix, iiy, sx, sy = _taps(ixs, iys)
+
+    r0 = _strip_bounds(iys, -1.0, float(gs.n_v), gs.n_v + 2 - band)
+    c0 = _strip_bounds(ixs, -1.0, float(gs.n_u), gs.n_u + 2 - width)
+
+    rel_r = iiy + 1 - r0[:, None]                # padded-relative tap rows
+    rel_c = iix + 1 - c0[:, None]
+
+    biota = jax.lax.broadcasted_iota(jnp.int32, (chunk, band), 1)
+    wiota = jax.lax.broadcasted_iota(jnp.int32, (chunk, width), 1)
+
+    nstrips = L * ns
+    spb = _divisor_at_most(nstrips, strips_per_block)
+
+    def block(args):
+        r0b, c0b, rrel, crel, sxb, syb = args
+
+        def one(r0i, c0i, rreli, creli, sxi, syi):
+            strip = jax.lax.dynamic_slice(padded, (r0i, c0i), (band, width))
+            rowsel = ((biota == rreli[:, None]) * (1.0 - syi[:, None])
+                      + (biota == rreli[:, None] + 1) * syi[:, None])
+            colsel = ((wiota == creli[:, None]) * (1.0 - sxi[:, None])
+                      + (wiota == creli[:, None] + 1) * sxi[:, None])
+            rowmix = rowsel.astype(padded.dtype) @ strip   # (chunk, width)
+            return jnp.sum(rowmix * colsel, axis=-1)
+
+        return jax.vmap(one)(r0b, c0b, rrel, crel, sxb, syb)
+
+    def rb(a):
+        return a.reshape((nstrips // spb, spb) + a.shape[1:])
+
+    vals = jax.lax.map(
+        block, (rb(r0), rb(c0), rb(rel_r), rb(rel_c), rb(sx), rb(sy)))
+    return vals.reshape(L, ns * chunk).reshape(L, L)
+
+
+def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
+                  gband: int = 4, gwidth: int = 64,
+                  groups_per_block: int = 512):
+    """Two-level micro-window sampling (beyond-paper; Pallas kernel scheme).
+
+    Refines ``strip``: per *group* of 8 voxels, a tiny
+    ``(gband, gwidth)`` window is block-loaded and the taps selected with
+    VPU-width one-hot compares.  Per-voxel cost drops from
+    ``2*band*width`` flops to ``~2*gband*gwidth`` — the napkin math behind
+    hillclimb iteration CT-1 in EXPERIMENTS.md.  Semantics identical to
+    every other strategy.
+    """
+    L = gs.L
+    group = _divisor_at_most(L, group)
+    ng = L // group
+    gband = min(gband, gs.n_v + 2)
+    gwidth = min(gwidth, gs.n_u + 2)
+    ixg = ix.reshape(L * ng, group)
+    iyg = iy.reshape(L * ng, group)
+    iix, iiy, sx, sy = _taps(ixg, iyg)
+
+    r0 = _strip_bounds(iyg, -1.0, float(gs.n_v), gs.n_v + 2 - gband)
+    c0 = _strip_bounds(ixg, -1.0, float(gs.n_u), gs.n_u + 2 - gwidth)
+    rel_r = iiy + 1 - r0[:, None]
+    rel_c = iix + 1 - c0[:, None]
+
+    biota = jax.lax.broadcasted_iota(jnp.int32, (group, gband), 1)
+    wiota = jax.lax.broadcasted_iota(jnp.int32, (group, gwidth), 1)
+
+    ngroups = L * ng
+    gpb = _divisor_at_most(ngroups, groups_per_block)
+
+    def block(args):
+        r0b, c0b, rrel, crel, sxb, syb = args
+
+        def one(r0i, c0i, rreli, creli, sxi, syi):
+            win = jax.lax.dynamic_slice(padded, (r0i, c0i), (gband, gwidth))
+            rowsel = ((biota == rreli[:, None]) * (1.0 - syi[:, None])
+                      + (biota == rreli[:, None] + 1) * syi[:, None])
+            colsel = ((wiota == creli[:, None]) * (1.0 - sxi[:, None])
+                      + (wiota == creli[:, None] + 1) * sxi[:, None])
+            rowmix = rowsel.astype(padded.dtype) @ win     # (group, gwidth)
+            return jnp.sum(rowmix * colsel, axis=-1)
+
+        return jax.vmap(one)(r0b, c0b, rrel, crel, sxb, syb)
+
+    def rb(a):
+        return a.reshape((ngroups // gpb, gpb) + a.shape[1:])
+
+    vals = jax.lax.map(
+        block, (rb(r0), rb(c0), rb(rel_r), rb(rel_c), rb(sx), rb(sy)))
+    return vals.reshape(L, L)
+
+
+# ----------------------------------------------------------------------
+# Part 3 — weighting + voxel update (streaming)
+# ----------------------------------------------------------------------
+
+def accumulate(plane, val, w, clip_mask=None):
+    """``VOL += val / w**2`` with the reciprocal already amortised.
+
+    ``w <= 0`` voxels (behind the source; impossible for sane geometries
+    but reachable in property-test sweeps) contribute zero.
+    """
+    r = jnp.where(w > _EPS_W, 1.0 / w, 0.0)
+    contrib = val * (r * r)
+    if clip_mask is not None:
+        contrib = contrib * clip_mask
+    return plane + contrib.astype(plane.dtype)
+
+
+# ----------------------------------------------------------------------
+# Drivers
+# ----------------------------------------------------------------------
+
+def _pad_image(image):
+    return jnp.pad(image, ((1, 1), (1, 1)))
+
+
+def _sample(strategy, image, padded, ix, iy, gs, opts):
+    if strategy == "scalar":
+        return sample_scalar(image, ix, iy, gs)
+    if strategy == "gather":
+        return sample_gather(padded, ix, iy, gs)
+    if strategy == "onehot":
+        return sample_onehot(padded, ix, iy, gs, **opts)
+    if strategy == "strip":
+        return sample_strip(padded, ix, iy, gs, **opts)
+    if strategy == "strip2":
+        return sample_strip2(padded, ix, iy, gs, **opts)
+    raise ValueError(f"unknown strategy {strategy!r}; want {STRATEGIES}")
+
+
+def backproject_plane(plane, image, padded, A, gs: GeomStatic, z,
+                      strategy: str = "strip2", clip_mask=None, **opts):
+    """Back-project one projection into one z-plane of the volume."""
+    ix, iy, w = plane_coords(A, gs, z)
+    val = _sample(strategy, image, padded, ix, iy, gs, opts)
+    return accumulate(plane, val, w, clip_mask)
+
+
+@functools.partial(jax.jit, static_argnames=("gs", "strategy", "opts_tuple"))
+def _backproject_one_jit(volume, image, A, gs, strategy, opts_tuple):
+    opts = dict(opts_tuple)
+    padded = _pad_image(image)
+
+    def body(z, vol):
+        plane = jax.lax.dynamic_index_in_dim(vol, z, axis=0, keepdims=False)
+        plane = backproject_plane(plane, image, padded, A, gs, z,
+                                  strategy, **opts)
+        return jax.lax.dynamic_update_index_in_dim(vol, plane, z, axis=0)
+
+    return jax.lax.fori_loop(0, gs.L, body, volume)
+
+
+def backproject_one(volume, image, A, geom: Geometry | GeomStatic,
+                    strategy: str = "strip2", **opts):
+    """Add one projection's contribution to ``volume`` (``(L, L, L)``)."""
+    gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
+    return _backproject_one_jit(volume, jnp.asarray(image),
+                                jnp.asarray(A, jnp.float32), gs, strategy,
+                                tuple(sorted(opts.items())))
+
+
+def reconstruct(projections, matrices, geom: Geometry,
+                strategy: str = "strip2", volume=None, **opts):
+    """Full reconstruction: stream every projection into the volume.
+
+    ``projections`` are the *filtered* images ``(n_proj, n_v, n_u)``;
+    ``matrices`` the stacked ``(n_proj, 3, 4)`` RabbitCT matrices.  The
+    projection loop is a ``fori_loop`` so the compiled graph is one HLO
+    regardless of ``n_proj`` (the distribution layer shards this loop —
+    see :mod:`repro.core.pipeline`).
+    """
+    gs = GeomStatic.of(geom)
+    projections = jnp.asarray(projections)
+    matrices = jnp.asarray(matrices, jnp.float32)
+    if volume is None:
+        volume = jnp.zeros((gs.L, gs.L, gs.L), dtype=jnp.float32)
+    opts_tuple = tuple(sorted(opts.items()))
+
+    @functools.partial(jax.jit, static_argnames=())
+    def run(projections, matrices, volume):
+        def body(k, vol):
+            return _backproject_one_jit(vol, projections[k], matrices[k],
+                                        gs, strategy, opts_tuple)
+        return jax.lax.fori_loop(0, projections.shape[0], body, volume)
+
+    return run(projections, matrices, volume)

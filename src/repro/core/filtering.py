@@ -1,0 +1,158 @@
+"""FDK projection preprocessing: cosine weighting + ramp filtering.
+
+RabbitCT ships *pre-filtered* projections — the benchmark measures only the
+back projection.  Because we synthesise our own raw line integrals
+(:mod:`repro.core.phantom`), this module reproduces the missing
+preprocessing stage of the FDK algorithm so the full pipeline
+(scan -> filter -> back-project) is runnable end to end:
+
+1. **Cosine weighting**: each ray is scaled by
+   ``sdd / sqrt(sdd^2 + u^2 + v^2)`` — the cone-beam obliquity factor.
+2. **Ramp filter** applied along detector rows (the ``u`` axis) using the
+   band-limited Ram-Lak kernel evaluated in the spatial domain and applied
+   via FFT with zero padding to the next power of two >= 2*n_u (linear, not
+   circular, convolution).
+3. **FDK constant**: the filtered projection is scaled by
+   ``delta_theta * (sdd / (2 * sid)) * du``.  Derivation: FDK filters on
+   the *virtual* detector through the isocenter (coordinates
+   ``a = u / M`` with magnification ``M = sdd / sid``); rewriting the
+   convolution in physical detector coordinates picks up ``M`` from the
+   kernel's ``1/da^2`` homogeneity and ``1/M`` from the measure, net
+   ``M``; the leading FDK ``1/2`` accounts for every ray being measured
+   twice over a full ``2*pi`` sweep.  For short scans (RabbitCT's 200
+   degree C-arm) the doubled wedge instead gets Parker weights
+   (:func:`parker_weights`).
+
+Everything is jittable jnp code; the filter runs on device as part of the
+streamed reconstruction pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .geometry import Geometry
+
+__all__ = ["ramlak_kernel", "cosine_weights", "parker_weights",
+           "filter_projections"]
+
+
+def ramlak_kernel(n: int, du: float) -> np.ndarray:
+    """Band-limited Ram-Lak kernel ``h[-n//2 : n-n//2]`` (spatial domain).
+
+    Standard discretisation (Kak & Slaney eq. 61):
+    ``h[0] = 1/(4 du^2)``, ``h[k] = -1/(pi k du)^2`` for odd ``k``, else 0.
+    """
+    k = np.arange(-(n // 2), n - n // 2)
+    h = np.zeros(n, dtype=np.float64)
+    h[k == 0] = 1.0 / (4.0 * du * du)
+    odd = (np.abs(k) % 2) == 1
+    h[odd] = -1.0 / (np.pi * k[odd] * du) ** 2
+    return h
+
+
+def cosine_weights(geom: Geometry) -> np.ndarray:
+    """Cone-beam obliquity weights, shape ``(n_v, n_u)`` (host precompute)."""
+    u = (np.arange(geom.n_u) - geom.cu) * geom.du
+    v = (np.arange(geom.n_v) - geom.cv) * geom.dv
+    uu, vv = np.meshgrid(u, v)
+    return (geom.sdd / np.sqrt(geom.sdd ** 2 + uu ** 2 + vv ** 2)).astype(
+        np.float32)
+
+
+def parker_weights(geom: Geometry) -> np.ndarray:
+    """Parker short-scan weights, shape ``(n_proj, n_u)``.
+
+    For a sweep of ``pi + 2*delta`` (``delta`` = half fan angle) each ray is
+    measured once or twice; Parker's smooth weights make the doubled wedge
+    sum to one while full-2*pi scans reduce to the constant ``pi / sweep``
+    (so combined with the FDK ``1/2`` the net angular measure is correct
+    for any sweep).  RabbitCT's C-arm sweeps ~200 degrees, so this is what
+    makes the *real* geometry reconstruct cleanly.
+    """
+    # Fan angle of each detector column (on the virtual detector).
+    u = (np.arange(geom.n_u) - geom.cu) * geom.du
+    gamma = np.arctan2(u, geom.sdd)                       # (n_u,)
+    delta = float(np.max(np.abs(gamma)))
+    betas = geom.angles - geom.angles[0]                  # (n_proj,)
+    sweep = float(geom.sweep)
+
+    if sweep >= 2.0 * np.pi - 1e-9:
+        return np.full((geom.n_proj, geom.n_u), 2.0 * np.pi / sweep,
+                       dtype=np.float32)
+    if sweep < np.pi + 2 * delta - 1e-9:
+        # Not enough data for exact short-scan weighting; fall back to a
+        # flat compensation so at least the DC level is right.
+        return np.full((geom.n_proj, geom.n_u), 2.0 * np.pi / sweep,
+                       dtype=np.float32)
+
+    b = betas[:, None]
+    g = gamma[None, :]
+    w = np.ones((geom.n_proj, geom.n_u), dtype=np.float64)
+    # Ramp-up wedge: 0 <= beta <= 2*(delta - gamma)
+    up = b <= 2.0 * (delta - g)
+    with np.errstate(invalid="ignore", divide="ignore"):
+        w_up = np.sin(np.pi / 4.0 * b / (delta - g)) ** 2
+    w = np.where(up, np.nan_to_num(w_up, nan=0.0), w)
+    # Ramp-down wedge: pi - 2*gamma <= beta <= pi + 2*delta
+    down = b >= np.pi - 2.0 * g
+    with np.errstate(invalid="ignore", divide="ignore"):
+        w_dn = np.sin(np.pi / 4.0 * (np.pi + 2 * delta - b)
+                      / (delta + g)) ** 2
+    w = np.where(down, np.nan_to_num(w_dn, nan=0.0), w)
+    # Beyond the short-scan range contributes zero.
+    w = np.where(b > np.pi + 2 * delta, 0.0, w)
+    # Parker weights are defined against an angular measure of d_beta with
+    # the FDK 1/2 removed; our filter keeps the 1/2, so scale by 2 and by
+    # the ratio of nominal (2*pi) to actual coverage handled above.
+    return (2.0 * w).astype(np.float32)
+
+
+def filter_projections(projections, geom: Geometry, dtype=jnp.float32,
+                       short_scan: bool | None = None) -> jnp.ndarray:
+    """Apply FDK weighting + ramp filter to ``(n_proj, n_v, n_u)`` rays.
+
+    Pure-jnp and jittable; vmapped over the projection axis.  The FFT
+    length is padded to the next power of two at least ``2 * n_u`` for
+    linear convolution.  ``short_scan`` adds Parker weights (default: on
+    whenever the sweep is below ``2*pi``).
+    """
+    projections = jnp.asarray(projections, dtype=dtype)
+    n_u = geom.n_u
+    pad = 1
+    while pad < 2 * n_u:
+        pad *= 2
+    h = ramlak_kernel(pad, geom.du)
+    # Roll zero-lag to index 0 so FFT convolution aligns with the input.
+    h = np.roll(h, -(pad // 2))
+    hf = jnp.asarray(np.fft.rfft(h))                      # complex (pad//2+1,)
+    cosw = jnp.asarray(cosine_weights(geom))
+
+    if short_scan is None:
+        short_scan = geom.sweep < 2.0 * np.pi - 1e-9
+    pw = (jnp.asarray(parker_weights(geom))[:, None, :] if short_scan
+          else None)                                      # (n_proj, 1, n_u)
+    if pw is not None and projections.ndim == 3 \
+            and projections.shape[0] != pw.shape[0]:
+        # A projection subset (streaming/sharded callers): weights for
+        # the first k angles.
+        pw = pw[:projections.shape[0]]
+
+    delta = float(geom.sweep / geom.n_proj)
+    scale = delta * (geom.sdd / (2.0 * geom.sid)) * geom.du
+
+    def _apply(p, pk):  # (n_v, n_u) -> (n_v, n_u)
+        w = (p * cosw).astype(jnp.float32)
+        if pk is not None:
+            w = w * pk
+        wf = jnp.fft.rfft(w, n=pad, axis=-1)
+        f = jnp.fft.irfft(wf * hf, n=pad, axis=-1)[..., :n_u]
+        return (f * scale).astype(dtype)
+
+    if projections.ndim == 2:
+        return _apply(projections, None)
+    if pw is None:
+        return jax.vmap(lambda p: _apply(p, None))(projections)
+    return jax.vmap(_apply)(projections, pw)

@@ -1,0 +1,54 @@
+"""RabbitCT-style reconstruction quality metrics.
+
+RabbitCT scores entries on speed *and* accuracy (mean squared error and
+PSNR against a reference volume, evaluated over the inscribed sphere of the
+volume so the corners — which some projections never see — don't bias the
+score).  We keep that convention and evaluate against the *analytic*
+voxelised phantom.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["roi_mask", "mse", "psnr", "quality_report"]
+
+
+def roi_mask(L: int) -> np.ndarray:
+    """Boolean mask of the inscribed sphere (RabbitCT's scoring region)."""
+    c = (L - 1) / 2.0
+    g = np.arange(L, dtype=np.float64) - c
+    zz, yy, xx = np.meshgrid(g, g, g, indexing="ij")
+    return (xx * xx + yy * yy + zz * zz) <= c * c
+
+
+def mse(volume, reference, mask=None):
+    volume = jnp.asarray(volume, jnp.float32)
+    reference = jnp.asarray(reference, jnp.float32)
+    err = (volume - reference) ** 2
+    if mask is not None:
+        mask = jnp.asarray(mask)
+        return jnp.sum(err * mask) / jnp.sum(mask)
+    return jnp.mean(err)
+
+
+def psnr(volume, reference, mask=None, data_range: float | None = None):
+    """Peak signal-to-noise ratio in dB (RabbitCT's headline metric)."""
+    if data_range is None:
+        data_range = float(jnp.max(jnp.asarray(reference))
+                           - jnp.min(jnp.asarray(reference)))
+        data_range = data_range or 1.0
+    m = mse(volume, reference, mask)
+    return 10.0 * jnp.log10((data_range ** 2) / jnp.maximum(m, 1e-20))
+
+
+def quality_report(volume, reference) -> dict:
+    L = int(np.asarray(volume).shape[0])
+    mask = roi_mask(L)
+    return {
+        "mse_roi": float(mse(volume, reference, mask)),
+        "psnr_roi_db": float(psnr(volume, reference, mask)),
+        "mse_full": float(mse(volume, reference)),
+        "psnr_full_db": float(psnr(volume, reference)),
+    }

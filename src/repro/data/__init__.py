@@ -1,0 +1,3 @@
+"""Data pipelines: deterministic synthetic LM tokens + CT projections."""
+
+from .tokens import TokenDataset, make_lm_batches  # noqa: F401

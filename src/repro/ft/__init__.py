@@ -1,0 +1,3 @@
+"""Fault tolerance: restartable loops, preemption simulation, stragglers."""
+
+from .manager import FaultTolerantLoop, PreemptionSimulator  # noqa: F401

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels (validated with interpret=True on CPU).
+
+Each kernel ships the required triple: the ``pl.pallas_call`` kernel with
+explicit BlockSpec/VMEM tiling, a jit'd ops wrapper, and a pure-jnp
+oracle (``*_ref``).
+"""
+
+from .backproject_ops import pallas_backproject_one  # noqa: F401
+from .gather_kernel_ops import pallas_onehot_gather  # noqa: F401
+from .slstm_ops import fused_slstm_forward  # noqa: F401

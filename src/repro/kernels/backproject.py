@@ -1,0 +1,391 @@
+"""Pallas TPU kernel: strip-blocked cone-beam back projection.
+
+The TPU-native re-think of the paper's fastest CPU scheme (AVX/FMA3
+"pairwise loads beat hardware gather", section 6.1), built from three
+mechanisms the x86 kernels could only approximate:
+
+1. **Strip DMA instead of gather** — per grid step the kernel computes the
+   detector footprint of its ``(TY, CHUNK)`` voxel tile *in-kernel* (Part 1
+   on the VPU), then issues one ``make_async_copy`` HBM->VMEM block copy of
+   the minimal ``(band, width)`` strip.  One DMA descriptor replaces
+   ``4 * TY * CHUNK`` scattered loads: this is the pairwise-load idea at
+   DMA granularity.
+2. **MXU as texture unit** — the vertical interpolation is a banded
+   one-hot matmul ``rowsel(P, band) @ strip(band, width)`` on the MXU; the
+   horizontal 2-tap selection runs as iota-compare/select on the VPU.
+   Out-of-band one-hot rows are identically zero, which (with the 1-pixel
+   zero border added by ops.py) gives exact zero-outside-detector
+   semantics with *no* per-tap conditionals — the paper's zero-padded
+   buffer trick (section 5.1.1).
+3. **Grid pipelining instead of SMT** — KNC needed 4-way SMT to hide
+   gather latency and still failed (section 6.4); here the volume-tile
+   loads/stores are pipelined by the Pallas grid machinery, and the strip
+   DMA for step ``k+1`` can be issued during step ``k``'s compute
+   (double-buffered variant, ``double_buffer=True`` — hillclimb CT-2 in
+   EXPERIMENTS.md).
+
+Semantics are identical to ``repro.core.backproject.sample_scalar`` +
+``accumulate`` (floor bilinear, zero outside, ``1/w^2`` weighting), which
+is the oracle in ``backproject_ref.py``; correctness requires
+``band``/``width`` to cover each tile's footprint (guaranteed by the
+host-side planner in ``repro.core.clipping`` — ops.py checks it).
+
+VMEM budget per step (defaults TY=8, CHUNK=128, band=16, width=512, f32):
+strip 32 KB (x2 when double-buffered) + rowmix 2 MB + volume tile 4 KB —
+comfortably inside 16 MB, leaving the pipeline room to prefetch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["backproject_kernel", "backproject_volume_pallas"]
+
+_EPS_W = 1e-6
+
+
+def _part1_tile(A_ref, o_mm, z, y0, x0, ty, chunk):
+    """Part 1 on the VPU: ICS coords for a (ty, chunk) voxel tile."""
+    O, MM = o_mm
+    ys = (y0 + jax.lax.broadcasted_iota(jnp.float32, (ty, chunk), 0))
+    xs = (x0 + jax.lax.broadcasted_iota(jnp.float32, (ty, chunk), 1))
+    wx = O + xs * MM
+    wy = O + ys * MM
+    wz = O + z.astype(jnp.float32) * MM
+    u = wx * A_ref[0, 0] + wy * A_ref[0, 1] + wz * A_ref[0, 2] + A_ref[0, 3]
+    v = wx * A_ref[1, 0] + wy * A_ref[1, 1] + wz * A_ref[1, 2] + A_ref[1, 3]
+    w = wx * A_ref[2, 0] + wy * A_ref[2, 1] + wz * A_ref[2, 2] + A_ref[2, 3]
+    r = jnp.where(w > _EPS_W, 1.0 / w, 0.0)   # reciprocal trick (paper 5.1)
+    return u * r, v * r, w, r
+
+
+def _tile_geometry(A_ref, o_mm, z, y0, x0, *, n_u, n_v, ty, chunk, band,
+                   width, pad_rows, pad_cols):
+    """Part 1 + strip origin + activity flag for one (ty, chunk) tile."""
+    ix, iy, w, r = _part1_tile(A_ref, o_mm, z, y0, x0, ty, chunk)
+    ix_c = jnp.clip(ix, -1.0, jnp.float32(n_u))
+    iy_c = jnp.clip(iy, -1.0, jnp.float32(n_v))
+    r0 = jnp.clip(jnp.floor(jnp.min(iy_c)).astype(jnp.int32),
+                  0, pad_rows - band)
+    c0 = jnp.clip(jnp.floor(jnp.min(ix_c)).astype(jnp.int32),
+                  0, pad_cols - width)
+    active = ((jnp.min(ix) < jnp.float32(n_u)) & (jnp.max(ix) > -1.0)
+              & (jnp.min(iy) < jnp.float32(n_v)) & (jnp.max(iy) > -1.0)
+              & (jnp.max(w) > _EPS_W))
+    return ix, iy, w, r, r0, c0, active
+
+
+def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
+                       strip_ref, sem,
+                       *, o_mm, n_u, n_v, ty, chunk, band, width):
+    """One grid step: back-project one projection into a (1, TY, CHUNK)
+    volume tile.
+
+    Refs: ``A_ref`` (3,4) f32 in SMEM; ``img_ref`` zero-padded projection
+    in ANY/HBM; ``vol_in/out`` aliased volume tile in VMEM; ``strip_ref``
+    VMEM scratch; ``sem`` DMA semaphore.
+    """
+    z = pl.program_id(0)
+    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
+    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
+
+    ix, iy, w, r, r0, c0, active = _tile_geometry(
+        A_ref, o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty, chunk=chunk,
+        band=band, width=width, pad_rows=img_ref.shape[0],
+        pad_cols=img_ref.shape[1])
+
+    @pl.when(active)
+    def _():
+        # --- Part 2: one strip DMA replaces 4*TY*CHUNK gathers ----------
+        copy = pltpu.make_async_copy(
+            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)], strip_ref, sem)
+        copy.start()
+
+        fx = jnp.floor(ix)
+        fy = jnp.floor(iy)
+        sx = ix - fx
+        sy = iy - fy
+        # Padded-relative tap coordinates (+1: pad offset).
+        rel_r = fy.astype(jnp.int32) + 1 - r0
+        rel_c = fx.astype(jnp.int32) + 1 - c0
+
+        p = ty * chunk
+        rel_r_f = rel_r.reshape(p, 1)
+        rel_c_f = rel_c.reshape(p, 1)
+        sy_f = sy.reshape(p, 1)
+        sx_f = sx.reshape(p, 1)
+
+        biota = jax.lax.broadcasted_iota(jnp.int32, (p, band), 1)
+        wiota = jax.lax.broadcasted_iota(jnp.int32, (p, width), 1)
+        rowsel = ((biota == rel_r_f).astype(jnp.float32) * (1.0 - sy_f)
+                  + (biota == rel_r_f + 1).astype(jnp.float32) * sy_f)
+        colsel = ((wiota == rel_c_f).astype(jnp.float32) * (1.0 - sx_f)
+                  + (wiota == rel_c_f + 1).astype(jnp.float32) * sx_f)
+
+        copy.wait()
+        strip = strip_ref[...].astype(jnp.float32)
+        # MXU: vertical interpolation for the whole tile at once.
+        rowmix = jax.lax.dot_general(
+            rowsel, strip, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # (p, width)
+        val = jnp.sum(rowmix * colsel, axis=1)             # VPU 2-tap blend
+
+        # --- Part 3: inverse-square-law weighted accumulate -------------
+        contrib = (val.reshape(ty, chunk) * (r * r)).astype(
+            vol_in_ref.dtype)
+        vol_out_ref[...] = vol_in_ref[...] + contrib[None]
+
+    @pl.when(jnp.logical_not(active))
+    def _():
+        vol_out_ref[...] = vol_in_ref[...]
+
+
+def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
+                             strip_ref, sem,
+                             *, o_mm, n_u, n_v, ty, chunk, band, width,
+                             group, gband, gwidth):
+    """Micro-window variant (hillclimb CT-5): strip DMA as usual, but the
+    tap selection runs per ``group``-voxel micro-window instead of one
+    tile-wide banded matmul.
+
+    The plain kernel's rowsel matmul costs ``2 * band * width`` flops per
+    voxel (16k at production size) because every voxel's one-hot row
+    spans the whole strip.  Within a group of 8 consecutive voxels the
+    taps span only ~``group * du`` columns and ~2 rows, so a
+    ``(gband, gwidth)`` VMEM sub-slice + tiny selects bring it down to
+    ``~2 * gband * gwidth`` (256) flops per voxel — the same napkin math
+    as the jnp ``strip2`` strategy, now at kernel level where the strip
+    load is a DMA rather than an XLA gather.
+    """
+    z = pl.program_id(0)
+    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
+    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
+
+    ix, iy, w, r, r0, c0, active = _tile_geometry(
+        A_ref, o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty, chunk=chunk,
+        band=band, width=width, pad_rows=img_ref.shape[0],
+        pad_cols=img_ref.shape[1])
+
+    @pl.when(active)
+    def _():
+        copy = pltpu.make_async_copy(
+            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)], strip_ref,
+            sem)
+        copy.start()
+
+        fx = jnp.floor(ix)
+        fy = jnp.floor(iy)
+        sx = (ix - fx).reshape(ty * chunk)
+        sy = (iy - fy).reshape(ty * chunk)
+        rel_r = (fy.astype(jnp.int32) + 1 - r0).reshape(ty * chunk)
+        rel_c = (fx.astype(jnp.int32) + 1 - c0).reshape(ty * chunk)
+        rw2 = (r * r).reshape(ty * chunk)
+
+        copy.wait()
+        n_groups = (ty * chunk) // group
+        cols_per_row = chunk // group
+
+        biota = jax.lax.broadcasted_iota(jnp.int32, (group, gband), 1)
+        wiota = jax.lax.broadcasted_iota(jnp.int32, (group, gwidth), 1)
+
+        def one_group(g, _):
+            gs_ = g * group
+            rr = jax.lax.dynamic_slice(rel_r, (gs_,), (group,))
+            cc = jax.lax.dynamic_slice(rel_c, (gs_,), (group,))
+            sxg = jax.lax.dynamic_slice(sx, (gs_,), (group,))
+            syg = jax.lax.dynamic_slice(sy, (gs_,), (group,))
+            wg = jax.lax.dynamic_slice(rw2, (gs_,), (group,))
+            # Window origin from the *in-strip* tap positions only (far
+            # out-of-detector voxels would otherwise drag the window off
+            # the contributing taps; their own one-hots are zero either
+            # way).
+            r0g = jnp.clip(jnp.min(jnp.clip(rr, 0, band - 1)),
+                           0, band - gband)
+            c0g = jnp.clip(jnp.min(jnp.clip(cc, 0, width - 1)),
+                           0, width - gwidth)
+            win = strip_ref[pl.ds(r0g, gband), pl.ds(c0g, gwidth)]
+            rowsel = ((biota == (rr - r0g)[:, None]).astype(jnp.float32)
+                      * (1.0 - syg[:, None])
+                      + (biota == (rr - r0g)[:, None] + 1).astype(
+                          jnp.float32) * syg[:, None])
+            colsel = ((wiota == (cc - c0g)[:, None]).astype(jnp.float32)
+                      * (1.0 - sxg[:, None])
+                      + (wiota == (cc - c0g)[:, None] + 1).astype(
+                          jnp.float32) * sxg[:, None])
+            mix = jax.lax.dot_general(
+                rowsel, win.astype(jnp.float32),
+                (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)      # (group, gwidth)
+            val = jnp.sum(mix * colsel, axis=1) * wg
+            row = gs_ // chunk
+            col = (g % cols_per_row) * group
+            cur = vol_in_ref[0, row, pl.ds(col, group)]
+            vol_out_ref[0, row, pl.ds(col, group)] = \
+                cur + val.astype(vol_in_ref.dtype)
+            return 0
+
+        jax.lax.fori_loop(0, n_groups, one_group, 0)
+
+    @pl.when(jnp.logical_not(active))
+    def _():
+        vol_out_ref[...] = vol_in_ref[...]
+
+
+def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
+                          strip_ref, sems,
+                          *, o_mm, n_u, n_v, ty, chunk, band, width,
+                          grid_dims):
+    """Double-buffered variant: the strip DMA for grid step ``k+1`` is
+    issued before step ``k``'s compute (hillclimb CT-3).
+
+    KNC had no usable gather prefetch (the paper found
+    ``vgatherpf0dps`` blocking and scalar prefetch too expensive,
+    section 6.4); on TPU the strip origin is *computed* geometry, so the
+    next tile's DMA can be launched exactly one step ahead into the
+    other half of a (2, band, width) scratch — compute and DMA overlap
+    with zero extra instructions on the critical path.
+    """
+    nz, ny, nc = grid_dims
+    z = pl.program_id(0)
+    yb = pl.program_id(1)
+    cb = pl.program_id(2)
+    step = (z * ny + yb) * nc + cb
+    slot = jax.lax.rem(step, 2)
+
+    pad_rows = img_ref.shape[0]
+    pad_cols = img_ref.shape[1]
+
+    def tile(zi, yi, ci):
+        return _tile_geometry(
+            A_ref, o_mm, zi, (yi * ty).astype(jnp.float32),
+            (ci * chunk).astype(jnp.float32), n_u=n_u, n_v=n_v, ty=ty,
+            chunk=chunk, band=band, width=width, pad_rows=pad_rows,
+            pad_cols=pad_cols)
+
+    def start_dma(r0, c0, s):
+        pltpu.make_async_copy(
+            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
+            strip_ref.at[s], sems.at[s]).start()
+
+    ix, iy, w, r, r0, c0, active = tile(z, yb, cb)
+
+    # First step primes its own slot.
+    @pl.when(step == 0)
+    def _():
+        start_dma(r0, c0, slot)
+
+    # Prefetch the next tile's strip into the other slot.
+    nxt = step + 1
+    last = nz * ny * nc - 1
+
+    @pl.when(step < last)
+    def _():
+        cn = jax.lax.rem(nxt, nc)
+        rest = jax.lax.div(nxt, nc)
+        yn = jax.lax.rem(rest, ny)
+        zn = jax.lax.div(rest, ny)
+        _, _, _, _, r0n, c0n, _ = tile(zn, yn, cn)
+        start_dma(r0n, c0n, 1 - slot)
+
+    @pl.when(active)
+    def _():
+        pltpu.make_async_copy(
+            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
+            strip_ref.at[slot], sems.at[slot]).wait()
+        fx = jnp.floor(ix)
+        fy = jnp.floor(iy)
+        sx = ix - fx
+        sy = iy - fy
+        rel_r = fy.astype(jnp.int32) + 1 - r0
+        rel_c = fx.astype(jnp.int32) + 1 - c0
+        p = ty * chunk
+        biota = jax.lax.broadcasted_iota(jnp.int32, (p, band), 1)
+        wiota = jax.lax.broadcasted_iota(jnp.int32, (p, width), 1)
+        rowsel = ((biota == rel_r.reshape(p, 1)).astype(jnp.float32)
+                  * (1.0 - sy.reshape(p, 1))
+                  + (biota == rel_r.reshape(p, 1) + 1).astype(jnp.float32)
+                  * sy.reshape(p, 1))
+        colsel = ((wiota == rel_c.reshape(p, 1)).astype(jnp.float32)
+                  * (1.0 - sx.reshape(p, 1))
+                  + (wiota == rel_c.reshape(p, 1) + 1).astype(jnp.float32)
+                  * sx.reshape(p, 1))
+        strip = strip_ref[slot].astype(jnp.float32)
+        rowmix = jax.lax.dot_general(
+            rowsel, strip, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        val = jnp.sum(rowmix * colsel, axis=1)
+        contrib = (val.reshape(ty, chunk) * (r * r)).astype(
+            vol_in_ref.dtype)
+        vol_out_ref[...] = vol_in_ref[...] + contrib[None]
+
+    @pl.when(jnp.logical_not(active))
+    def _():
+        # The prefetched strip for this inactive tile must still be
+        # consumed so the semaphore balances.
+        pltpu.make_async_copy(
+            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
+            strip_ref.at[slot], sems.at[slot]).wait()
+        vol_out_ref[...] = vol_in_ref[...]
+
+
+def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
+                              ty=8, chunk=128, band=16, width=512,
+                              double_buffer=False, micro=False,
+                              micro_group=8, micro_band=4,
+                              micro_width=32, interpret=False):
+    """``pallas_call`` wrapper: one projection into the whole volume.
+
+    ``volume``: (L, L, L) f32; ``padded_img``: zero-padded projection,
+    row/col counts already rounded up by ops.py so ``band``/``width``
+    slices always fit.  Returns the updated volume (input aliased).
+    ``double_buffer=True`` selects the DMA-prefetching variant (CT-3);
+    ``micro=True`` the per-group micro-window compute (CT-5).
+    """
+    L = volume.shape[0]
+    assert L % ty == 0 and L % chunk == 0
+    grid = (L, L // ty, L // chunk)
+
+    vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
+    if micro:
+        kernel = functools.partial(
+            backproject_kernel_micro, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width,
+            group=micro_group, gband=micro_band, gwidth=micro_width)
+        scratch = [pltpu.VMEM((band, width), padded_img.dtype),
+                   pltpu.SemaphoreType.DMA]
+        name = "backproject_strip_micro"
+    elif double_buffer:
+        kernel = functools.partial(
+            backproject_kernel_db, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width, grid_dims=grid)
+        scratch = [pltpu.VMEM((2, band, width), padded_img.dtype),
+                   pltpu.SemaphoreType.DMA((2,))]
+        name = "backproject_strip_db"
+    else:
+        kernel = functools.partial(
+            backproject_kernel, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width)
+        scratch = [pltpu.VMEM((band, width), padded_img.dtype),
+                   pltpu.SemaphoreType.DMA]
+        name = "backproject_strip"
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # A (3, 4)
+            pl.BlockSpec(memory_space=pltpu.ANY),    # padded image (HBM)
+            vol_spec,                                # volume tile in
+        ],
+        out_specs=vol_spec,
+        out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
+        scratch_shapes=scratch,
+        input_output_aliases={2: 0},
+        interpret=interpret,
+        name=name,
+    )(A, padded_img, volume)

@@ -1,0 +1,117 @@
+"""Public jit'd wrapper for the Pallas back projection kernel.
+
+Handles everything the kernel assumes away: zero-padding the projection to
+the 1-pixel border the zero-outside semantics rely on, rounding the padded
+buffer up so every (band, width) strip slice is in-bounds, validating the
+static strip size against the host planner, and falling back to
+``interpret=True`` off-TPU so the same entry point works everywhere
+(kernels are *validated* on CPU, *targeted* at TPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backproject import GeomStatic
+from repro.core.clipping import plan_strips
+from repro.core.geometry import Geometry
+
+from .backproject import backproject_volume_pallas
+
+__all__ = ["pallas_backproject_one", "validate_strip_config"]
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_up(image, band: int, width: int):
+    """1-pixel zero border, then round rows/cols up to slice-safe sizes.
+
+    Rows are rounded to a multiple of 8 (sublane tile) and cols to a
+    multiple of 128 (lane tile), and at least (band, width), so any
+    clamped ``(band, width)`` dynamic slice stays in-bounds and
+    hardware-aligned.
+    """
+    n_v, n_u = image.shape
+    rows = max(band, n_v + 2)
+    rows += (-rows) % 8
+    cols = max(width, n_u + 2)
+    cols += (-cols) % 128
+    return jnp.pad(image, ((1, rows - n_v - 1), (1, cols - n_u - 1)))
+
+
+def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
+                          chunk: int, band: int, width: int) -> None:
+    """Host-side check that (band, width) covers every tile footprint.
+
+    A tile spans ``ty`` lines x ``chunk`` voxels; per-line strip needs are
+    computed exactly by the planner (monotone-beam property), and adjacent
+    lines' strips are merged by taking min/max origins.  Raises with the
+    required sizes if the static config is too small — silent tap loss is
+    never possible.
+    """
+    plan = plan_strips(geom, A, chunk=chunk)
+    r0 = plan.r0.astype(np.int64)
+    c0 = plan.c0.astype(np.int64)
+    # Merge ty adjacent lines: worst-case span = max over the group of
+    # (origin + required extent) - min origin.
+    L = geom.L
+    g = r0.reshape(L, L // ty, ty, -1)
+    span_r = g.max(axis=2) - g.min(axis=2) + plan.required_band
+    gc = c0.reshape(L, L // ty, ty, -1)
+    span_c = gc.max(axis=2) - gc.min(axis=2) + plan.required_width
+    need_band, need_width = int(span_r.max()), int(span_c.max())
+    if band < need_band or width < need_width:
+        raise ValueError(
+            f"strip config (band={band}, width={width}) does not cover the "
+            f"tile footprint; need at least (band={need_band}, "
+            f"width={need_width}) for ty={ty}, chunk={chunk}")
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gs", "ty", "chunk", "band", "width",
+                     "double_buffer", "micro", "interpret"))
+def _run(volume, image, A, gs: GeomStatic, ty, chunk, band, width,
+         double_buffer, micro, interpret):
+    padded = _pad_up(image, band, width)
+    return backproject_volume_pallas(
+        volume, padded, A,
+        o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
+        ty=ty, chunk=chunk, band=band, width=width,
+        double_buffer=double_buffer, micro=micro, interpret=interpret)
+
+
+def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
+                           *, ty: int = 8, chunk: int = 128, band: int = 16,
+                           width: int = 512, double_buffer: bool = False,
+                           micro: bool = False,
+                           interpret: bool | None = None,
+                           validate: bool = False):
+    """Add one projection to ``volume`` using the Pallas kernel.
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpreter
+    elsewhere.  ``validate=True`` runs the host planner check first
+    (cheap; recommended once per geometry).  ``double_buffer=True``
+    overlaps strip DMA with compute (hillclimb CT-3).
+    """
+    gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
+    ty = min(ty, gs.L)
+    chunk = min(chunk, gs.L)
+    band = min(band, max(8, gs.n_v + 2 + (-(gs.n_v + 2)) % 8))
+    width = min(width, max(128, gs.n_u + 2 + (-(gs.n_u + 2)) % 128))
+    if validate:
+        if isinstance(geom, GeomStatic):
+            raise ValueError("validate=True needs the full Geometry")
+        validate_strip_config(geom, np.asarray(A, np.float64), ty=ty,
+                              chunk=chunk, band=band, width=width)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _run(jnp.asarray(volume), jnp.asarray(image),
+                jnp.asarray(A, jnp.float32), gs, ty, chunk, band, width,
+                double_buffer, micro, interpret)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Pallas back projection kernel.
+
+Independent of the kernel's blocking entirely: Listing-1 semantics
+(per-tap bounds-checked bilinear, ``1/w^2`` weighting) vectorised over the
+volume.  Any (shape, dtype, geometry) the kernel accepts must match this
+to fp32 rounding — enforced by the sweep in
+``tests/test_kernel_backproject.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backproject import (GeomStatic, accumulate, plane_coords,
+                                    sample_scalar)
+
+__all__ = ["backproject_volume_ref"]
+
+
+def backproject_volume_ref(volume, image, A, gs: GeomStatic):
+    """Reference volume update for one (unpadded) projection image."""
+    A = jnp.asarray(A, jnp.float32)
+    image = jnp.asarray(image)
+
+    def plane(z, vol):
+        ix, iy, w = plane_coords(A, gs, z)
+        val = sample_scalar(image, ix, iy, gs)
+        pl_ = jax.lax.dynamic_index_in_dim(vol, z, 0, keepdims=False)
+        pl_ = accumulate(pl_, val, w)
+        return jax.lax.dynamic_update_index_in_dim(vol, pl_, z, 0)
+
+    return jax.lax.fori_loop(0, gs.L, plane, volume)

@@ -1,0 +1,79 @@
+"""Pallas TPU kernel: one-hot-matmul gather ("the MXU as texture unit").
+
+The embedding/MoE-side instantiation of the paper's technique: instead of
+asking the backend for a hardware gather (``table[ids]`` -> XLA gather HLO,
+which XLA:TPU lowers to a serialised descriptor loop — the exact analogue
+of KNC's microcoded ``vgatherdps``), the rows are *computed*:
+
+    out[n, :] = onehot(ids[n]) @ table
+
+The vocabulary axis is tiled by the grid, so each step does a
+``(TN, C) @ (C, D)`` MXU matmul and accumulates into the output block;
+the one-hot is built on the VPU with an iota compare.  No gather HLO
+exists anywhere in the lowering (verified by
+``benchmarks/table2_op_census.py``).
+
+Grid: ``(N / TN, V / C)``; the output block for row-tile ``i`` is revisited
+across all vocab chunks ``j`` (initialised at ``j == 0``) — the standard
+Pallas reduction-grid pattern.  The table block ``(C, D)`` streams through
+VMEM once per row-tile; arithmetic intensity is ``2 * TN`` flops per table
+byte, so for ``TN >= ~200`` the kernel turns a memory-bound serialised
+gather into a compute-dense MXU stream (Table 4 analogue measures the
+crossover).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["onehot_gather_kernel", "onehot_gather_pallas"]
+
+
+def onehot_gather_kernel(ids_ref, table_ref, out_ref, *, chunk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    base = j * chunk
+    ids = ids_ref[...]                                   # (TN, 1) int32
+    iota = jax.lax.broadcasted_iota(jnp.int32, (ids.shape[0], chunk), 1)
+    oh = (iota == (ids - base)).astype(table_ref.dtype)  # (TN, C)
+    out_ref[...] += jax.lax.dot_general(
+        oh, table_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype)
+
+
+def onehot_gather_pallas(table: jax.Array, ids: jax.Array, *,
+                         row_tile: int = 256, chunk: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """Gather ``table[ids]`` with zero gather HLOs.
+
+    ``table``: (V, D); ``ids``: (N,) int32.  V must divide by ``chunk``
+    and N by ``row_tile`` (ops.py pads both).  Out-of-range ids return
+    zero rows (one-hot matches nothing) — the same zero-padding semantics
+    the back projection uses.
+    """
+    V, D = table.shape
+    N = ids.shape[0]
+    assert V % chunk == 0 and N % row_tile == 0, (V, chunk, N, row_tile)
+    grid = (N // row_tile, V // chunk)
+
+    kernel = functools.partial(onehot_gather_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((chunk, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, D), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N, D), table.dtype),
+        interpret=interpret,
+        name="onehot_gather",
+    )(ids.reshape(N, 1).astype(jnp.int32), table)

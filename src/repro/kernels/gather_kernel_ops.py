@@ -1,0 +1,42 @@
+"""Jit'd wrapper for the one-hot gather kernel (padding + fallback)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .gather import onehot_gather_pallas
+
+__all__ = ["pallas_onehot_gather"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("row_tile", "chunk", "interpret"))
+def _run(table, ids, row_tile, chunk, interpret):
+    V, D = table.shape
+    n = ids.shape[0]
+    pad_v = (-V) % chunk
+    pad_n = (-n) % row_tile
+    tbl = jnp.pad(table, ((0, pad_v), (0, 0))) if pad_v else table
+    idv = jnp.pad(ids, (0, pad_n), constant_values=-1) if pad_n else ids
+    out = onehot_gather_pallas(tbl, idv, row_tile=row_tile, chunk=chunk,
+                               interpret=interpret)
+    return out[:n]
+
+
+def pallas_onehot_gather(table, ids, *, row_tile: int = 256,
+                         chunk: int = 512,
+                         interpret: bool | None = None):
+    """``table[ids]`` via the MXU; auto-interprets off TPU.
+
+    Accepts any leading ids shape; out-of-range ids give zero rows.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    shape = ids.shape
+    flat = ids.reshape(-1).astype(jnp.int32)
+    row_tile = min(row_tile, max(8, flat.shape[0]))
+    out = _run(jnp.asarray(table), flat, row_tile, chunk, interpret)
+    return out.reshape(shape + (table.shape[-1],))

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the one-hot gather kernel.
+
+``table[ids]`` with out-of-range ids mapped to zero rows — the exact
+semantics ``onehot_gather_pallas`` implements.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["gather_ref"]
+
+
+def gather_ref(table, ids):
+    V = table.shape[0]
+    ok = (ids >= 0) & (ids < V)
+    rows = jnp.take(table, jnp.clip(ids, 0, V - 1), axis=0)
+    return jnp.where(ok[..., None], rows, 0)

@@ -1,0 +1,56 @@
+"""Jit'd wrapper: drop-in fused-sLSTM forward matching ssm.slstm_forward."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense
+
+from .slstm import slstm_pallas
+
+__all__ = ["fused_slstm_forward"]
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if not pad:
+        return x
+    cfgpad = [(0, 0)] * x.ndim
+    cfgpad[axis] = (0, pad)
+    return jnp.pad(x, cfgpad)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "td", "seq_chunk",
+                                             "interpret"))
+def _run(zifo, r, tb, td, seq_chunk, interpret):
+    return slstm_pallas(zifo, r, tb=tb, td=td, seq_chunk=seq_chunk,
+                        interpret=interpret)
+
+
+def fused_slstm_forward(params, cfg, x, *, dtype=jnp.bfloat16,
+                        interpret: bool | None = None):
+    """Numerically matches :func:`repro.models.ssm.slstm_forward`.
+
+    The gate projection and out-projection run as normal XLA matmuls;
+    only the recurrence runs in the fused kernel (HBM traffic: one
+    read of the gates, one write of the hidden states).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    zifo = dense(params, "zifo", x, dtype).astype(jnp.float32)
+    zifo = zifo.reshape(B, S, 4, di)
+    r = params["r_zifo"].astype(jnp.float32)
+
+    tb = min(8, B)
+    td = min(128, di)
+    seq_chunk = min(256, S)
+    zp = _pad_to(_pad_to(_pad_to(zifo, tb, 0), seq_chunk, 1), td, 3)
+    rp = _pad_to(r, td, 1)
+    hs = _run(zp, rp, tb, td, seq_chunk, interpret)
+    hs = hs[:B, :S, :di].astype(dtype)
+    return dense(params, "out_proj", hs, dtype)

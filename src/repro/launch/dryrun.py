@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell.
+
+THE two lines above must run before any other import (jax locks the
+device count at first init); everything else follows.
+
+For each cell this script:
+
+1. builds abstract inputs (``ShapeDtypeStruct`` — nothing is allocated),
+2. builds shardings from the logical-axis rules (DESIGN.md §5),
+3. ``jax.jit(step).lower(...).compile()`` on the production mesh —
+   16x16 single-pod and 2x16x16 multi-pod (512 placeholder devices),
+4. records ``memory_analysis()`` (fits-per-device proof),
+   ``cost_analysis()`` (per-device flops/bytes) and the collective bytes
+   parsed from the optimised HLO into
+   ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Shapes lower what the assignment dictates: ``train_4k`` a full
+fwd+bwd+AdamW ``train_step``; ``prefill_32k`` the prompt pass returning
+the decode cache; ``decode_32k``/``long_500k`` a one-token ``serve_step``
+against a seq_len cache.
+
+Usage::
+
+    python -m repro.launch.dryrun --arch chatglm3-6b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse
+import dataclasses
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo import roofline_terms
+from repro.analysis.hlo_module import analyze_module
+from repro.configs import SHAPES, ShapeConfig
+from repro.configs.registry import ARCHS, cell_supported
+from repro.dist.sharding import ShardingRules, logical_to_spec, \
+    sharding_context, valid_spec
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import (FRONTEND_DIM, abstract_params, decode_step,
+                                init_cache, param_specs, prefill)
+from repro.training.optim import AdamWConfig, init_opt_state, \
+    opt_state_specs
+from repro.training.train import make_train_step
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+# ----------------------------------------------------------------------
+# Per-cell policy: rules + optimizer state dtype scale with model size
+# ----------------------------------------------------------------------
+
+def pick_rules(cfg, shape: ShapeConfig, mesh,
+               sp_act: bool = False) -> ShardingRules:
+    batch_axes = ("pod", "data")
+    fsdp = ("pod", "data") if cfg.param_count() > 1e11 else ("data",)
+    sp = ("model",) if shape.is_decode else ()
+    # Sequence-parallel residual only helps archs whose sequence mixing
+    # is parallel (attention); a recurrent scan over a seq-sharded stream
+    # crosses shards every step (xlstm: 6-44x REGRESSION — EXPERIMENTS.md
+    # §Perf LM-2 iteration 6, refuted-and-scoped).
+    use_sp = (sp_act and not shape.is_decode
+              and "attn" in cfg.block_pattern)
+    rules = ShardingRules(batch=batch_axes, fsdp=fsdp, tp=("model",),
+                          ep=("model",), sp=sp,
+                          sp_act=("model",) if use_sp else (),
+                          flash_decode=bool(sp_act and shape.is_decode))
+    shards = 1
+    for a in batch_axes:
+        if a in mesh.axis_names:
+            shards *= mesh.shape[a]
+    if shape.global_batch % shards:
+        rules = dataclasses.replace(rules, batch=())
+    return rules
+
+
+def pick_opt(cfg) -> AdamWConfig:
+    n = cfg.param_count()
+    state = "int8" if n > 5e11 else ("bfloat16" if n > 1e11
+                                     else "float32")
+    return AdamWConfig(state_dtype=state)
+
+
+# ----------------------------------------------------------------------
+# Abstract inputs
+# ----------------------------------------------------------------------
+
+def input_specs(cfg, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for the model inputs of one cell."""
+    gb, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "decode":
+        return {"tokens": sds((gb, 1), I32)}
+    batch = {}
+    if cfg.frontend == "vision":
+        n_img = S // 4
+        batch["patches"] = sds((gb, n_img, FRONTEND_DIM["vision"]),
+                               jnp.bfloat16)
+        batch["tokens"] = sds((gb, S - n_img), I32)
+        if shape.kind == "train":
+            batch["labels"] = sds((gb, S - n_img), I32)
+        return batch
+    if cfg.frontend == "audio":
+        batch["frames"] = sds((gb, S, FRONTEND_DIM["audio"]),
+                              jnp.bfloat16)
+    batch["tokens"] = sds((gb, S), I32)
+    if shape.kind == "train":
+        batch["labels"] = sds((gb, S), I32)
+    return batch
+
+
+def _sharding(mesh, rules, leaf, logical_axes):
+    spec = logical_to_spec(logical_axes, rules, mesh)
+    return NamedSharding(mesh, valid_spec(leaf.shape, spec, mesh))
+
+
+def batch_shardings(batch, mesh, rules):
+    def spec_of(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return _sharding(mesh, rules, leaf, axes)
+
+    return jax.tree.map(spec_of, batch)
+
+
+def _cache_logical_specs(cfg, cache):
+    """Logical axes per cache leaf, keyed by block kind + leaf name."""
+    kinds = {f"b{j}": k for j, k in enumerate(cfg.block_pattern)}
+
+    def walk(blocks):
+        out = {}
+        for bname, leaves in blocks.items():
+            kind = kinds[bname]
+            sub = {}
+            for lname, leaf in leaves.items():
+                nd = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+                if lname in ("k", "v", "k_s", "v_s"):
+                    ax = ("null", "batch", "sp", None, None)
+                elif lname in ("cross_k", "cross_v"):
+                    ax = ("null", "batch", None, None, None)
+                elif kind == "mamba" and lname == "conv":
+                    ax = ("null", "batch", None, "tp")
+                elif kind == "mamba" and lname == "h":
+                    ax = ("null", "batch", "tp", None)
+                elif kind == "mlstm" and lname == "C":
+                    ax = ("null", "batch", "tp", None, None)
+                elif kind == "mlstm" and lname in ("n",):
+                    ax = ("null", "batch", "tp", None)
+                elif kind == "mlstm" and lname == "m":
+                    ax = ("null", "batch", "tp")
+                else:                       # slstm scalar-memory states
+                    ax = ("null", "batch", "tp")
+                assert len(ax) == nd, (bname, lname, ax, leaf.shape)
+                sub[lname] = ax
+            out[bname] = sub
+        return out
+
+    return {"blocks": walk(cache["blocks"])}
+
+
+def cache_shardings(cfg, cache_sds, mesh, rules):
+    logical = _cache_logical_specs(cfg, cache_sds)
+    return jax.tree.map(
+        lambda leaf, ax: _sharding(mesh, rules, leaf, ax),
+        cache_sds, logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def param_shardings(cfg, params_sds, mesh, rules):
+    specs = param_specs(cfg)
+    return jax.tree.map(
+        lambda leaf, ax: _sharding(mesh, rules, leaf, ax),
+        params_sds, specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+# ----------------------------------------------------------------------
+# Cell lowering
+# ----------------------------------------------------------------------
+
+def lower_cell(cfg, shape: ShapeConfig, mesh, *, moe_impl="scatter",
+               remat=True, accum_steps=1, sp_act=False, kv_dtype=None):
+    """Returns (lowered, meta) for one cell on one mesh."""
+    if kv_dtype:
+        cfg = dataclasses.replace(cfg, kv_cache_dtype=kv_dtype)
+    if shape.is_decode and moe_impl == "ep":
+        # Manual EP all-gathers the FSDP-sharded expert weights every
+        # step; at decode token counts that dominates (kimi decode:
+        # x 5.2 s vs 0.06 s with portable scatter).  Dispatch policy is
+        # shape-dependent: EP for train/prefill, scatter for decode.
+        moe_impl = "scatter"
+    rules = pick_rules(cfg, shape, mesh, sp_act=sp_act)
+    params_sds = abstract_params(cfg)
+    ps = param_shardings(cfg, params_sds, mesh, rules)
+    batch = input_specs(cfg, shape)
+    bs = batch_shardings(batch, mesh, rules)
+
+    if shape.kind == "train":
+        opt_cfg = pick_opt(cfg)
+        step = make_train_step(cfg, opt_cfg, moe_impl=moe_impl,
+                               remat=remat, accum_steps=accum_steps)
+        opt_sds = jax.eval_shape(
+            functools.partial(init_opt_state, cfg=opt_cfg), params_sds)
+        ospecs = opt_state_specs(param_specs(cfg), opt_cfg.state_dtype)
+        os_ = jax.tree.map(
+            lambda leaf, ax: _sharding(mesh, rules, leaf, ax),
+            opt_sds, ospecs,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        jitted = jax.jit(step, in_shardings=(ps, os_, bs),
+                         out_shardings=(ps, os_, None),
+                         donate_argnums=(0, 1))
+        with sharding_context(mesh, rules):
+            lowered = jitted.lower(params_sds, opt_sds, batch)
+        meta = {"step": "train_step", "opt_state": opt_cfg.state_dtype}
+    elif shape.kind == "prefill":
+        def pre(params, batch):
+            return prefill(params, cfg, batch, max_len=shape.seq_len,
+                           moe_impl=moe_impl)
+
+        jitted = jax.jit(pre, in_shardings=(ps, bs))
+        with sharding_context(mesh, rules):
+            lowered = jitted.lower(params_sds, batch)
+        meta = {"step": "prefill_step"}
+    else:
+        enc_len = shape.seq_len if cfg.enc_dec else 0
+        cache_sds = jax.eval_shape(
+            functools.partial(init_cache, cfg, shape.global_batch,
+                              shape.seq_len, enc_len))
+        cs = cache_shardings(cfg, cache_sds, mesh, rules)
+
+        def serve_step(params, cache, tokens, index):
+            return decode_step(params, cfg, cache, tokens, index,
+                               moe_impl=moe_impl)
+
+        jitted = jax.jit(
+            serve_step,
+            in_shardings=(ps, cs, bs["tokens"], None),
+            out_shardings=(None, cs),
+            donate_argnums=(1,))
+        with sharding_context(mesh, rules):
+            lowered = jitted.lower(params_sds, cache_sds, batch["tokens"],
+                                   jax.ShapeDtypeStruct((), I32))
+        meta = {"step": "serve_step"}
+    meta["rules"] = dataclasses.asdict(rules)
+    return lowered, meta
+
+
+def run_cell(cfg, shape, mesh_name: str, *, out_dir=None, verbose=True,
+             **kw):
+    """Lower + compile + analyse one cell; returns the record dict."""
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    chips = mesh.size
+    rec = {
+        "arch": cfg.name, "shape": shape.name, "mesh": mesh_name,
+        "chips": chips,
+        "model_params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return _emit(rec, out_dir, verbose)
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(cfg, shape, mesh, **kw)
+        rec.update(meta)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes": int(mem.peak_memory_in_bytes),
+        }
+        live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes)
+        rec["memory"]["live_bytes"] = int(live)
+        rec["fits_16gb_hbm"] = bool(live < 16e9)
+
+        # Loop-weighted per-device analysis (repro.analysis.hlo_module):
+        # XLA's own cost_analysis counts while bodies once, so scanned
+        # layer stacks would be undercounted by their trip counts.
+        hlo = compiled.as_text()
+        mod = analyze_module(hlo)
+        flops = mod["flops"]
+        bytes_acc = mod["bytes"]
+        coll = mod["collectives"]
+        xla_cost = compiled.cost_analysis() or {}
+        rec["cost"] = {
+            "flops_per_device": flops,
+            "bytes_accessed_per_device": bytes_acc,
+            "collective_bytes_per_device": coll,
+            "census": mod["census"],
+            "xla_flops_unweighted": float(xla_cost.get("flops", 0.0)),
+        }
+        rec["roofline"] = roofline_terms(flops, bytes_acc, coll["total"])
+
+        # Useful-compute ratio: MODEL_FLOPS / compiled flops (global).
+        tokens = shape.global_batch * (1 if shape.is_decode
+                                       else shape.seq_len)
+        n_act = cfg.active_param_count()
+        mult = 6 if shape.kind == "train" else 2
+        model_flops = mult * n_act * tokens
+        rec["model_flops"] = float(model_flops)
+        global_flops = flops * chips
+        rec["useful_flops_ratio"] = (
+            float(model_flops / global_flops) if global_flops else None)
+        rec["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return _emit(rec, out_dir, verbose)
+
+
+def _emit(rec, out_dir, verbose):
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(
+            out_dir, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "ok":
+            r = rec["roofline"]
+            print(f"[OK]   {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['mesh']:8s} dominant={r['dominant']:10s} "
+                  f"c={r['compute_s']:.3e} m={r['memory_s']:.3e} "
+                  f"x={r['collective_s']:.3e} "
+                  f"live={rec['memory']['live_bytes'] / 1e9:.2f}GB "
+                  f"(lower {rec.get('lower_s')}s, "
+                  f"compile {rec.get('compile_s')}s)", flush=True)
+        elif rec["status"] == "skipped":
+            print(f"[SKIP] {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['mesh']:8s} {rec['reason'][:60]}", flush=True)
+        else:
+            print(f"[ERR]  {rec['arch']:24s} {rec['shape']:12s} "
+                  f"{rec['mesh']:8s} {rec['error'][:120]}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower+compile every (arch x shape) cell")
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--moe-impl", default="scatter",
+                    choices=["scatter", "einsum", "grouped", "ep"])
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel residual stream")
+    ap.add_argument("--kv-dtype", default=None, choices=["bf16", "int8"],
+                    help="decode KV-cache storage dtype")
+    args = ap.parse_args()
+
+    meshes = (["pod", "multipod"] if args.mesh == "both"
+              else [args.mesh])
+    # Explicit --arch/--shape filters win over --all.
+    archs = [args.arch] if args.arch else sorted(ARCHS)
+    shapes = [args.shape] if args.shape else sorted(SHAPES)
+
+    n_bad = 0
+    for mesh_name in meshes:
+        for a in archs:
+            for s in shapes:
+                rec = run_cell(ARCHS[a], SHAPES[s], mesh_name,
+                               out_dir=args.out,
+                               accum_steps=args.accum_steps,
+                               moe_impl=args.moe_impl, sp_act=args.sp,
+                               kv_dtype=args.kv_dtype)
+                n_bad += rec["status"] == "error"
+    raise SystemExit(1 if n_bad else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Architecture zoo (populated by model.py import at the end)."""

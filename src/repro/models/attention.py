@@ -1,0 +1,374 @@
+"""GQA attention: chunked-softmax training/prefill + KV-cache decode.
+
+Three entry points sharing one parameter set:
+
+* :func:`attention_train` — full-sequence causal attention.  Above
+  ``cfg.attn_chunk`` keys the score matrix is never materialised: an
+  online-softmax ``lax.scan`` over KV blocks keeps activation memory
+  ``O(S * chunk)`` (flash-attention recurrence, which is what lets the
+  ``prefill_32k`` cells fit — see EXPERIMENTS.md §Dry-run).
+* :func:`attention_decode` — one new token against a ``(B, T, KV, hd)``
+  cache; pure streaming (the KV read is the *structured* access pattern
+  the paper contrasts with true scattered gathers).
+* cross-attention (Whisper) reuses ``attention_train`` without the causal
+  mask.
+
+Sharding: heads are ``tp``, batch is ``batch``; KV heads replicate within
+a TP group when ``n_kv_heads < tp`` (GQA kv=2/4/8 cells).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_constraint
+
+from .layers import Param, apply_rope, dense, init_dense
+
+__all__ = ["init_attention", "attention_train", "attention_decode",
+           "init_kv_cache"]
+
+_NEG = -1e30
+
+
+def init_attention(p: Param, cfg, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    init_dense(p, "wq", d, cfg.n_heads * hd, ("fsdp", "tp"),
+               bias=cfg.qkv_bias)
+    init_dense(p, "wk", d, cfg.n_kv_heads * hd, ("fsdp", "tp"),
+               bias=cfg.qkv_bias)
+    init_dense(p, "wv", d, cfg.n_kv_heads * hd, ("fsdp", "tp"),
+               bias=cfg.qkv_bias)
+    init_dense(p, "wo", cfg.n_heads * hd, d, ("tp", "fsdp"))
+
+
+def _rope_one(t, positions, cfg):
+    """Apply the configured RoPE variant to one (B, S, H, hd) tensor."""
+    if positions is None or cfg.rope == "none":
+        return t
+    return apply_rope(t, t, positions, cfg.hd, cfg.rope_theta, cfg.rope)[0]
+
+
+def _qkv(params, cfg, xq, xkv, positions, kv_positions, dtype):
+    B, S = xq.shape[:2]
+    T = xkv.shape[1]
+    hd = cfg.hd
+    q = dense(params, "wq", xq, dtype).reshape(B, S, cfg.n_heads, hd)
+    k = dense(params, "wk", xkv, dtype).reshape(B, T, cfg.n_kv_heads, hd)
+    v = dense(params, "wv", xkv, dtype).reshape(B, T, cfg.n_kv_heads, hd)
+    q = _rope_one(q, positions, cfg)
+    k = _rope_one(k, kv_positions, cfg)
+    q = shard_constraint(q, ("batch", None, "tp", None))
+    k = shard_constraint(k, ("batch", None, "tp", None))
+    v = shard_constraint(v, ("batch", None, "tp", None))
+    return q, k, v
+
+
+def _group(q, n_kv):
+    """(B, S, H, hd) -> (B, S, KV, G, hd) with G = H // KV."""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, hd)
+
+
+def _dense_attention(q, k, v, causal, q_offset=0):
+    """Materialised-scores path (short sequences / smoke tests)."""
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    logits = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None] + q_offset
+        ki = jnp.arange(T)[None, :]
+        logits = jnp.where(ki <= qi, logits, _NEG)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", p.astype(v.dtype), v)
+    return out.reshape(B, S, KV * G, hd)
+
+
+def _chunked_attention(q, k, v, causal, chunk, q_offset=0):
+    """Online-softmax scan over KV blocks; O(S * chunk) memory.
+
+    The running (m, l, acc) carry is pinned to head-sharding: without the
+    constraint GSPMD propagates the sequence-parallel residual sharding
+    into the scan carry and pays a full resharding copy per KV block
+    (hillclimb LM-2 iteration 5).
+    """
+    B, S, KV, G, hd = q.shape
+    T = k.shape[1]
+    assert T % chunk == 0, (T, chunk)
+    n_blocks = T // chunk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    qf = q.astype(jnp.float32) * scale
+    qf = shard_constraint(qf, ("batch", None, None, "tp", None))
+    kb = k.reshape(B, n_blocks, chunk, KV, hd)
+    vb = v.reshape(B, n_blocks, chunk, KV, hd)
+    qi = jnp.arange(S)[:, None] + q_offset
+
+    def pin(t):
+        """(B, KV, G, S[, hd]) carries: shard the G (q-head) axis."""
+        return shard_constraint(
+            t, ("batch", None, "tp", None) + (None,) * (t.ndim - 4))
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, j = blk
+        logits = jnp.einsum("bskgh,btkh->bkgst", qf,
+                            kc.astype(jnp.float32))     # (B,KV,G,S,chunk)
+        if causal:
+            ki = j * chunk + jnp.arange(chunk)[None, :]
+            logits = jnp.where(ki <= qi, logits, _NEG)
+        m_new = pin(jnp.maximum(m, logits.max(axis=-1)))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(logits - m_new[..., None])
+        l_new = pin(l * alpha + pexp.sum(axis=-1))
+        acc_new = pin(acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkh->bkgsh", pexp, vc.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = pin(jnp.full((B, KV, G, S), _NEG, jnp.float32))
+    l0 = pin(jnp.zeros((B, KV, G, S), jnp.float32))
+    a0 = pin(jnp.zeros((B, KV, G, S, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.swapaxes(0, 1), vb.swapaxes(0, 1),
+         jnp.arange(n_blocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4)                   # (B,S,KV,G,hd)
+    return out.reshape(B, S, KV * G, hd).astype(v.dtype)
+
+
+def attention_train(params, cfg, x, positions, *, causal=True,
+                    xkv=None, kv_positions=None, dtype=jnp.bfloat16,
+                    return_kv: bool = False):
+    """Full-sequence (self- or cross-) attention.
+
+    ``return_kv=True`` also returns the (k, v) tensors for cache seeding
+    (prefill path / whisper cross-attention precompute).
+    """
+    if xkv is None:
+        xkv, kv_positions = x, positions
+    q, k, v = _qkv(params, cfg, x, xkv, positions, kv_positions, dtype)
+    qg = _group(q, cfg.n_kv_heads)
+    T = k.shape[1]
+    if cfg.attn_chunk and T > cfg.attn_chunk:
+        out = _chunked_attention(qg, k, v, causal, cfg.attn_chunk)
+    else:
+        out = _dense_attention(qg, k, v, causal)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    y = dense(params, "wo", out, dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+# ----------------------------------------------------------------------
+# Decode path
+# ----------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Cache pytree for one attention block.
+
+    ``cfg.kv_cache_dtype == "int8"`` stores per-(token, kv-head)
+    symmetrically quantised keys/values + bf16 scales: decode is
+    memory-bound on exactly this cache stream (EXPERIMENTS.md §Roofline),
+    so int8 halves the dominant term at ~1e-2 logit error
+    (tests/test_kv_int8.py).
+    """
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    if cfg.kv_cache_dtype == "int8":
+        sshape = shape[:-1] + (1,)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_s": jnp.zeros(sshape, jnp.bfloat16),
+                "v_s": jnp.zeros(sshape, jnp.bfloat16)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _kv_quant(t):
+    """(B, S, KV, hd) -> int8 codes + per-(token, head) scales."""
+    amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequant(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(
+        dtype)
+
+
+def _decode_attend_sp(cfg, qg, k_new, v_new, cache, index, dtype):
+    """Flash-decoding over the sequence-parallel cache axis.
+
+    Without this, GSPMD all-gathers the whole per-layer KV cache before
+    the chunked attention scan (2 x cache-bytes x layers of all-gather —
+    86 GB/step for the mistral decode cell, §Perf serving iteration 2).
+    Manual schedule: each SP shard updates its cache slice if ``index``
+    falls in it, computes a *partial* softmax over its keys, and the
+    partials combine with one tiny log-sum-exp ``psum``
+    (B*H*hd-sized instead of cache-sized).
+    Returns (attended (B,1,KV,G,hd-flat), new_cache) or None when no
+    mesh/SP context is active.
+    """
+    from repro.dist.sharding import _CTX, logical_to_spec, valid_spec
+    from jax.sharding import PartitionSpec as P
+
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    if not getattr(rules, "flash_decode", False):
+        return None
+    sp_axes = tuple(a for a in rules.sp if a in mesh.axis_names)
+    sp_size = 1
+    for a in sp_axes:
+        sp_size *= mesh.shape[a]
+    T = cache["k"].shape[1]
+    if sp_size == 1 or T % sp_size:
+        return None
+    quant = cfg.kv_cache_dtype == "int8"
+
+    B, _, KV, G, hd = qg.shape
+
+    def pspec(shape, logical):
+        return valid_spec(shape, logical_to_spec(logical, rules, mesh),
+                          mesh)
+
+    cache_spec = jax.tree.map(
+        lambda l: pspec(l.shape, ("batch", "sp", None, None)), cache)
+    q_spec = pspec(qg.shape, ("batch", None, None, None, None))
+    kv_spec = pspec(k_new.shape, ("batch", None, None, None))
+
+    def body(q, kn, vn, c):
+        T_loc = c["k"].shape[1]
+        off = jnp.int32(0)
+        stride = T_loc
+        for a in reversed(sp_axes):
+            off = off + jax.lax.axis_index(a) * stride
+            stride *= mesh.shape[a]
+        # Local cache update iff index lands in this shard's range.
+        li = jnp.clip(index - off, 0, T_loc - 1)
+        mine = (index >= off) & (index < off + T_loc)
+
+        def upd(buf, new):
+            cur = jax.lax.dynamic_slice_in_dim(buf, li, 1, axis=1)
+            src = jnp.where(mine, new.astype(buf.dtype), cur)
+            return jax.lax.dynamic_update_slice_in_dim(buf, src, li,
+                                                       axis=1)
+
+        if quant:
+            kq, ks = _kv_quant(kn)
+            vq, vs = _kv_quant(vn)
+            nc = {"k": upd(c["k"], kq), "v": upd(c["v"], vq),
+                  "k_s": upd(c["k_s"], ks), "v_s": upd(c["v_s"], vs)}
+            k = _kv_dequant(nc["k"], nc["k_s"], dtype)
+            v = _kv_dequant(nc["v"], nc["v_s"], dtype)
+        else:
+            nc = {"k": upd(c["k"], kn), "v": upd(c["v"], vn)}
+            k, v = nc["k"], nc["v"]
+
+        # Partial attention over the local keys.
+        scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+        logits = jnp.einsum("bskgh,btkh->bkgst", q.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        ki = off + jnp.arange(T_loc)[None, :]
+        logits = jnp.where(ki <= index, logits, _NEG)
+        m_loc = logits.max(axis=-1)                     # (B,KV,G,1)
+        # Global max via max-psum trick, then shared-exponent partials.
+        m = jax.lax.pmax(m_loc, sp_axes[0]) if len(sp_axes) == 1 else \
+            _pmax_all(m_loc, sp_axes)
+        p = jnp.exp(logits - m[..., None])
+        l_loc = p.sum(axis=-1)
+        acc_loc = jnp.einsum("bkgst,btkh->bkgsh", p,
+                             v.astype(jnp.float32))
+        l = l_loc
+        acc = acc_loc
+        for a in sp_axes:
+            l = jax.lax.psum(l, a)
+            acc = jax.lax.psum(acc, a)
+        out = (acc / jnp.maximum(l, 1e-30)[..., None])
+        out = out.transpose(0, 3, 1, 2, 4)              # (B,1,KV,G,hd)
+        return out.astype(dtype), nc
+
+    wrapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, cache_spec),
+        out_specs=(q_spec, cache_spec),
+        check_vma=False)
+    return wrapped(qg, k_new, v_new, cache)
+
+
+def _pmax_all(x, axes):
+    for a in axes:
+        x = jax.lax.pmax(x, a)
+    return x
+
+
+def attention_decode(params, cfg, x, cache, index, *, dtype=jnp.bfloat16):
+    """One-token step: update cache at ``index``, attend to the prefix.
+
+    ``x``: (B, 1, d); ``index``: scalar int32 current position.  The
+    cached keys beyond ``index`` are masked, so a fixed-size cache serves
+    any prefix length (the decode_32k / long_500k cells size it to
+    seq_len).  Under an active sequence-parallel sharding context the
+    cache read runs as flash-decoding over the SP shards
+    (:func:`_decode_attend_sp`).
+    """
+    B = x.shape[0]
+    positions = jnp.full((B, 1), index, jnp.int32)
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions, (3, B, 1))
+    q, k_new, v_new = _qkv(params, cfg, x, x, positions, positions, dtype)
+    qg0 = _group(q, cfg.n_kv_heads)
+    sp = _decode_attend_sp(cfg, qg0, k_new, v_new, cache, index, dtype)
+    if sp is not None:
+        out, new_cache = sp
+        out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+        return dense(params, "wo", out, dtype), new_cache
+    quant = cfg.kv_cache_dtype == "int8"
+    if quant:
+        kq, ks = _kv_quant(k_new)
+        vq, vs = _kv_quant(v_new)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], kq, index, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], vq, index, axis=1),
+            "k_s": jax.lax.dynamic_update_slice_in_dim(
+                cache["k_s"], ks, index, axis=1),
+            "v_s": jax.lax.dynamic_update_slice_in_dim(
+                cache["v_s"], vs, index, axis=1),
+        }
+        k = _kv_dequant(new_cache["k"], new_cache["k_s"], dtype)
+        v = _kv_dequant(new_cache["v"], new_cache["v_s"], dtype)
+    else:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), index, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), index, axis=1)
+        new_cache = {"k": k, "v": v}
+    qg = _group(q, cfg.n_kv_heads)                       # (B,1,KV,G,hd)
+    T = k.shape[1]
+    if cfg.attn_chunk and T > cfg.attn_chunk:
+        # Streamed cache read: O(chunk) live logits even for 512k caches.
+        out = _chunked_attention(qg, k, v, True, cfg.attn_chunk,
+                                 q_offset=index)
+    else:
+        out = _dense_attention(qg, k, v, True, q_offset=index)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    y = dense(params, "wo", out, dtype)
+    return y, new_cache
+
+
+def attention_cross_step(params, cfg, x, k, v, *, dtype=jnp.bfloat16):
+    """Decode-time cross-attention against precomputed encoder (k, v)."""
+    B = x.shape[0]
+    q = dense(params, "wq", x, dtype).reshape(B, 1, cfg.n_heads, cfg.hd)
+    q = _rope_one(q, None, cfg)
+    out = _dense_attention(_group(q, cfg.n_kv_heads), k, v, causal=False)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return dense(params, "wo", out, dtype)

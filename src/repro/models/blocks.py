@@ -1,0 +1,215 @@
+"""Residual blocks: (mixer -> [cross-attn] -> MLP/MoE) with pre-norms.
+
+A block is described by ``kind`` ("attn" | "mamba" | "mlstm" | "slstm"),
+``use_moe`` (MoE replaces the MLP) and ``cross`` (decoder blocks of
+enc-dec models).  Three entry points:
+
+* :func:`block_forward` — full sequence (train / prefill without cache)
+* :func:`block_prefill` — full sequence, also returns the decode cache
+* :func:`block_step`    — one token with cache
+
+Every assigned architecture is a stack of these; the per-arch config only
+chooses the pattern (``configs/*.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .attention import (attention_cross_step, attention_decode,
+                        attention_train, init_attention, init_kv_cache)
+from .layers import Param, activation, apply_norm, dense, init_dense, \
+    init_norm
+from .moe import init_moe, moe_forward
+from .ssm import (init_mamba, init_mamba_cache, init_mlstm,
+                  init_mlstm_cache, init_slstm, init_slstm_cache,
+                  mamba_forward, mamba_step, mlstm_forward, mlstm_step,
+                  slstm_forward, slstm_step)
+
+__all__ = ["init_block", "init_block_cache", "block_forward",
+           "block_prefill", "block_step"]
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def init_mlp(p: Param, cfg):
+    d, ff = cfg.d_model, cfg.d_ff
+    if cfg.mlp_act == "swiglu":
+        init_dense(p, "w_gate", d, ff, ("fsdp", "tp"))
+        init_dense(p, "w_up", d, ff, ("fsdp", "tp"))
+    else:
+        init_dense(p, "w_in", d, ff, ("fsdp", "tp"))
+    init_dense(p, "w_down", ff, d, ("tp", "fsdp"))
+
+
+def mlp_forward(params, cfg, x, dtype):
+    if cfg.mlp_act == "swiglu":
+        h = jnp.asarray(activation("swiglu")(
+            dense(params, "w_gate", x, dtype))) \
+            * dense(params, "w_up", x, dtype)
+    else:
+        h = activation(cfg.mlp_act)(dense(params, "w_in", x, dtype))
+    return dense(params, "w_down", h, dtype)
+
+
+def init_block(p: Param, cfg, kind: str, use_moe: bool,
+               cross: bool = False):
+    init_norm(p, "ln1", cfg.d_model, cfg.norm)
+    mixer = p.sub("mixer")
+    if kind == "attn":
+        init_attention(mixer, cfg)
+    elif kind == "mamba":
+        init_mamba(mixer, cfg)
+    elif kind == "mlstm":
+        init_mlstm(mixer, cfg)
+    elif kind == "slstm":
+        init_slstm(mixer, cfg)
+    else:
+        raise ValueError(f"unknown mixer kind {kind!r}")
+    if cross:
+        init_norm(p, "lnx", cfg.d_model, cfg.norm)
+        init_attention(p.sub("cross"), cfg, cross=True)
+    if use_moe:
+        init_norm(p, "ln2", cfg.d_model, cfg.norm)
+        init_moe(p.sub("moe"), cfg)
+    elif cfg.d_ff:
+        init_norm(p, "ln2", cfg.d_model, cfg.norm)
+        init_mlp(p.sub("mlp"), cfg)
+
+
+def init_block_cache(cfg, kind: str, batch: int, max_len: int,
+                     cross: bool = False, enc_len: int = 0,
+                     dtype=jnp.bfloat16):
+    if kind == "attn":
+        cache = init_kv_cache(cfg, batch, max_len, dtype)
+    elif kind == "mamba":
+        cache = init_mamba_cache(cfg, batch)
+    elif kind == "mlstm":
+        cache = init_mlstm_cache(cfg, batch)
+    elif kind == "slstm":
+        cache = init_slstm_cache(cfg, batch)
+    else:
+        raise ValueError(kind)
+    if cross:
+        shape = (batch, enc_len, cfg.n_kv_heads, cfg.hd)
+        cache = dict(cache)
+        cache["cross_k"] = jnp.zeros(shape, dtype)
+        cache["cross_v"] = jnp.zeros(shape, dtype)
+    return cache
+
+
+# ----------------------------------------------------------------------
+# Forward paths
+# ----------------------------------------------------------------------
+
+def _ffn_part(params, cfg, x, use_moe, moe_impl, dtype):
+    aux = jnp.zeros((), jnp.float32)
+    if use_moe:
+        h = apply_norm(params, "ln2", x, cfg.norm)
+        y, aux = moe_forward(params["moe"], cfg, h, impl=moe_impl,
+                             dtype=dtype)
+        x = x + y
+    elif cfg.d_ff:
+        h = apply_norm(params, "ln2", x, cfg.norm)
+        x = x + mlp_forward(params["mlp"], cfg, h, dtype)
+    return x, aux
+
+
+def block_forward(params, cfg, kind: str, use_moe: bool, x, positions, *,
+                  causal=True, cross=False, enc_out=None,
+                  enc_positions=None, moe_impl="scatter",
+                  dtype=jnp.bfloat16):
+    h = apply_norm(params, "ln1", x, cfg.norm)
+    m = params["mixer"]
+    if kind == "attn":
+        mix = attention_train(m, cfg, h, positions, causal=causal,
+                              dtype=dtype)
+    elif kind == "mamba":
+        mix = mamba_forward(m, cfg, h, dtype=dtype)
+    elif kind == "mlstm":
+        mix = mlstm_forward(m, cfg, h, dtype=dtype)
+    else:
+        mix = slstm_forward(m, cfg, h, dtype=dtype)
+    x = x + mix
+    if cross:
+        h = apply_norm(params, "lnx", x, cfg.norm)
+        x = x + attention_train(params["cross"], cfg, h, positions,
+                                causal=False, xkv=enc_out,
+                                kv_positions=enc_positions, dtype=dtype)
+    return _ffn_part(params, cfg, x, use_moe, moe_impl, dtype)
+
+
+def block_prefill(params, cfg, kind: str, use_moe: bool, x, positions,
+                  max_len: int, *, cross=False, enc_out=None,
+                  enc_positions=None, moe_impl="scatter",
+                  dtype=jnp.bfloat16):
+    """Forward + decode-cache extraction (sequence fills ``[0, S)``)."""
+    B, S = x.shape[:2]
+    h = apply_norm(params, "ln1", x, cfg.norm)
+    m = params["mixer"]
+    if kind == "attn":
+        mix, (k, v) = attention_train(m, cfg, h, positions, causal=True,
+                                      dtype=dtype, return_kv=True)
+        pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+        if cfg.kv_cache_dtype == "int8":
+            from .attention import _kv_quant
+            kq, ks = _kv_quant(k)
+            vq, vs = _kv_quant(v)
+            cache = {"k": jnp.pad(kq, pad), "v": jnp.pad(vq, pad),
+                     "k_s": jnp.pad(ks, pad), "v_s": jnp.pad(vs, pad)}
+        else:
+            cache = {"k": jnp.pad(k, pad).astype(dtype),
+                     "v": jnp.pad(v, pad).astype(dtype)}
+    elif kind == "mamba":
+        mix, cache = mamba_forward(m, cfg, h, dtype=dtype,
+                                   return_state=True)
+    elif kind == "mlstm":
+        mix, cache = mlstm_forward(m, cfg, h, dtype=dtype,
+                                   return_state=True)
+    else:
+        mix, cache = slstm_forward(m, cfg, h, dtype=dtype,
+                                   return_state=True)
+    x = x + mix
+    if cross:
+        h = apply_norm(params, "lnx", x, cfg.norm)
+        y, (ck, cv) = attention_train(
+            params["cross"], cfg, h, positions, causal=False,
+            xkv=enc_out, kv_positions=enc_positions, dtype=dtype,
+            return_kv=True)
+        x = x + y
+        cache = dict(cache)
+        cache["cross_k"] = ck.astype(dtype)
+        cache["cross_v"] = cv.astype(dtype)
+    x, aux = _ffn_part(params, cfg, x, use_moe, moe_impl, dtype)
+    return x, cache, aux
+
+
+def block_step(params, cfg, kind: str, use_moe: bool, x, cache, index, *,
+               cross=False, moe_impl="scatter", dtype=jnp.bfloat16):
+    """One-token decode step.  ``x``: (B, 1, d)."""
+    h = apply_norm(params, "ln1", x, cfg.norm)
+    m = params["mixer"]
+    mix_cache = {k: v for k, v in cache.items()
+                 if not k.startswith("cross_")}
+    if kind == "attn":
+        mix, new_cache = attention_decode(m, cfg, h, mix_cache, index,
+                                          dtype=dtype)
+    elif kind == "mamba":
+        mix, new_cache = mamba_step(m, cfg, h, mix_cache, dtype=dtype)
+    elif kind == "mlstm":
+        mix, new_cache = mlstm_step(m, cfg, h, mix_cache, dtype=dtype)
+    else:
+        mix, new_cache = slstm_step(m, cfg, h, mix_cache, dtype=dtype)
+    x = x + mix
+    if cross:
+        h = apply_norm(params, "lnx", x, cfg.norm)
+        x = x + attention_cross_step(params["cross"], cfg, h,
+                                     cache["cross_k"], cache["cross_v"],
+                                     dtype=dtype)
+        new_cache = dict(new_cache)
+        new_cache["cross_k"] = cache["cross_k"]
+        new_cache["cross_v"] = cache["cross_v"]
+    x, _ = _ffn_part(params, cfg, x, use_moe, moe_impl, dtype)
+    return x, new_cache

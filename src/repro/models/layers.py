@@ -1,0 +1,255 @@
+"""Shared layers: params-as-pytrees, norms, embeddings, RoPE variants.
+
+Module style: plain functions.  ``init_*`` returns ``(params, specs)`` —
+two parallel pytrees, the second holding per-parameter *logical* sharding
+axes (see :mod:`repro.dist.sharding`).  ``apply`` functions are pure.
+No framework dependency (flax/optax unavailable offline); ~600 lines of
+layer code replaces them.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gather_ops import gather as gather_rows
+
+__all__ = [
+    "Param",
+    "init_dense",
+    "init_norm",
+    "apply_norm",
+    "init_embed",
+    "embed_lookup",
+    "unembed",
+    "rope_freqs",
+    "apply_rope",
+    "make_positions_mrope",
+    "activation",
+]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+class Param:
+    """Helper collecting (params, specs) pairs during init.
+
+    ``key=None`` puts it in *spec-only* mode: no arrays are created (all
+    params are ``None``) but the spec tree is complete — this is how the
+    dry-run derives shardings for trillion-parameter configs without
+    allocating a byte.
+    """
+
+    def __init__(self, key, dtype):
+        self.key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.specs: dict = {}
+
+    def sub(self, name: str) -> "Param":
+        if self.key is None:
+            p = Param(None, self.dtype)
+        else:
+            self.key, sub = jax.random.split(self.key)
+            p = Param(sub, self.dtype)
+        self.params[name] = p.params
+        self.specs[name] = p.specs
+        return p
+
+    def add(self, name: str, shape, logical_axes, *, scale=None,
+            init="normal"):
+        self.specs[name] = tuple(logical_axes)
+        if self.key is None:
+            self.params[name] = None
+            return None
+        self.key, sub = jax.random.split(self.key)
+        if init == "zeros":
+            val = jnp.zeros(shape, dtype=self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, dtype=self.dtype)
+        else:
+            if scale is None:
+                scale = 1.0 / math.sqrt(shape[0])
+            val = (jax.random.normal(sub, shape, jnp.float32)
+                   * scale).astype(self.dtype)
+        self.params[name] = val
+        return val
+
+    def done(self):
+        return self.params, self.specs
+
+
+# ----------------------------------------------------------------------
+# Dense / norms
+# ----------------------------------------------------------------------
+
+def init_dense(p: Param, name: str, d_in: int, d_out: int, logical_axes,
+               bias: bool = False):
+    p.add(name, (d_in, d_out), logical_axes)
+    if bias:
+        p.add(name + "_b", (d_out,), (logical_axes[-1],), init="zeros")
+
+
+def dense(params, name: str, x, compute_dtype=jnp.bfloat16):
+    w = params[name].astype(compute_dtype)
+    y = x.astype(compute_dtype) @ w
+    b = params.get(name + "_b")
+    if b is not None:
+        y = y + b.astype(compute_dtype)
+    return y
+
+
+def init_norm(p: Param, name: str, d: int, kind: str = "rmsnorm"):
+    p.add(name + "_scale", (d,), ("null",), init="ones")
+    if kind == "layernorm":
+        p.add(name + "_bias", (d,), ("null",), init="zeros")
+
+
+def apply_norm(params, name: str, x, kind: str = "rmsnorm",
+               eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y + params[name + "_bias"].astype(jnp.float32)
+    y = y * params[name + "_scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Embedding — gather-strategy consumer #1
+# ----------------------------------------------------------------------
+
+def init_embed(p: Param, vocab: int, d: int, tie: bool):
+    # 1/sqrt(d) init + sqrt(d) lookup scaling keeps both the residual
+    # stream and (tied) logits at unit scale.
+    p.add("embed", (vocab, d), ("tp", "fsdp"), scale=1.0 / math.sqrt(d))
+    if not tie:
+        p.add("unembed", (d, vocab), ("fsdp", "tp"))
+
+
+def embed_lookup(params, tokens, impl: str = "take",
+                 compute_dtype=jnp.bfloat16):
+    """Token -> vector via the configured gather strategy.
+
+    ``impl="onehot"`` routes the 150k-row vocab gathers through the MXU
+    (zero gather HLOs) — the paper's technique applied to embeddings; the
+    dry-run op census quantifies the trade (EXPERIMENTS.md §Perf).
+    """
+    table = params["embed"]
+    d = table.shape[1]
+    out = gather_rows(table, tokens, impl=impl)
+    return out.astype(compute_dtype) * jnp.asarray(
+        math.sqrt(d), compute_dtype)
+
+
+def unembed(params, x, tie: bool, compute_dtype=jnp.bfloat16):
+    if tie:
+        w = params["embed"].astype(compute_dtype).T
+    else:
+        w = params["unembed"].astype(compute_dtype)
+    return (x.astype(compute_dtype) @ w).astype(jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# RoPE family: standard, 2d (ChatGLM), M-RoPE (Qwen2-VL)
+# ----------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float, rotary_dim: int | None = None):
+    rd = rotary_dim or hd
+    return 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(q, k, positions, hd: int, theta: float, variant: str):
+    """Apply a RoPE variant to (B, S, H, hd) queries/keys.
+
+    ``standard``: full-dim rotary on scalar positions ``(B, S)``.
+    ``rope2d``: ChatGLM-style — rotary on the first half of the head dim
+    only, the second half passes through.
+    ``mrope``: Qwen2-VL multimodal rotary — the rotary dims are split in
+    three sections fed by (t, h, w) position components
+    ``positions: (3, B, S)``; for text tokens the three components are
+    equal, recovering standard RoPE exactly (arXiv:2409.12191).
+    ``none``/``nope``: identity (``none`` gets sinusoidal embeddings at the
+    input instead — whisper; ``nope`` has no positional signal at all —
+    jamba, which relies on the mamba blocks for position).
+    """
+    if variant in ("none", "nope"):
+        return q, k
+    if variant == "mrope":
+        assert positions.ndim == 3, "mrope wants (3, B, S) positions"
+        rd = hd
+        inv = rope_freqs(hd, theta)                       # (rd/2,)
+        n = inv.shape[0]
+        # Section split 2:1:1 over frequency dims (t gets the low freqs).
+        s1, s2 = n - 2 * (n // 4), n // 4
+        sec = jnp.concatenate([
+            jnp.zeros((s1,), jnp.int32),
+            jnp.ones((s2,), jnp.int32),
+            jnp.full((n - s1 - s2,), 2, jnp.int32)])
+        pos = positions.astype(jnp.float32)               # (3, B, S)
+        ang_all = pos[..., None] * inv                    # (3, B, S, rd/2)
+        ang = ((sec == 0) * ang_all[0] + (sec == 1) * ang_all[1]
+               + (sec == 2) * ang_all[2])                 # (B, S, rd/2)
+        cos = jnp.cos(ang)[:, :, None, :].astype(q.dtype)
+        sin = jnp.sin(ang)[:, :, None, :].astype(q.dtype)
+        return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+    rd = hd // 2 if variant == "rope2d" else hd
+    inv = rope_freqs(hd, theta, rd)
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (B, S, rd/2)
+    cos = jnp.cos(ang)[:, :, None, :].astype(q.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(q.dtype)
+    if variant == "rope2d":
+        q1, q2 = q[..., :rd], q[..., rd:]
+        k1, k2 = k[..., :rd], k[..., rd:]
+        return (jnp.concatenate([_rotate(q1, cos, sin), q2], -1),
+                jnp.concatenate([_rotate(k1, cos, sin), k2], -1))
+    return _rotate(q, cos, sin), _rotate(k, cos, sin)
+
+
+def make_positions_mrope(batch: int, seq: int, n_patches: int = 0,
+                         grid: tuple[int, int] | None = None):
+    """(t, h, w) positions: a patch grid followed by text tokens."""
+    t = jnp.arange(seq, dtype=jnp.int32)
+    if n_patches and grid:
+        gh, gw = grid
+        hh = jnp.arange(n_patches) // gw
+        ww = jnp.arange(n_patches) % gw
+        tt = jnp.zeros((n_patches,), jnp.int32)
+        t_txt = jnp.arange(seq - n_patches, dtype=jnp.int32) + 1
+        t = jnp.concatenate([tt, t_txt])
+        h = jnp.concatenate([hh, t_txt])
+        w = jnp.concatenate([ww, t_txt])
+    else:
+        h = w = t
+    pos = jnp.stack([t, h, w])                            # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+# ----------------------------------------------------------------------
+# Activations
+# ----------------------------------------------------------------------
+
+def activation(name: str):
+    if name == "swiglu":                  # handled in mlp (two inputs)
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                   # Nemotron-4 squared ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)

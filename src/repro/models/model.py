@@ -1,0 +1,338 @@
+"""GenericLM: every assigned architecture from one block-pattern engine.
+
+The model is ``embed -> scan(periods of blocks) -> norm -> unembed`` where
+a *period* is the repeating block pattern from the config (dense: one attn
+block; jamba: 1 attn + 7 mamba with MoE every 2nd; xlstm: mlstm/slstm
+pair; ...).  Parameters of equal-kind blocks are stacked along a leading
+``n_periods`` axis and the stack is driven by ``lax.scan`` — HLO size
+stays flat in depth (94-layer Qwen3-MoE lowers in seconds) and remat
+policy applies per period.
+
+Entry points (all pure):
+
+* :func:`init_model`      -> (params, logical sharding specs)
+* :func:`forward`         -> logits (+ MoE aux loss)        [train_step]
+* :func:`loss_fn`         -> scalar LM loss
+* :func:`prefill`         -> (last-token logits, cache)     [prefill_32k]
+* :func:`decode_step`     -> (logits, cache)                [serve_step]
+* :func:`init_cache`      -> decode cache pytree
+
+Enc-dec (Whisper) adds an encoder stack + cross-attention; VLM (Qwen2-VL)
+prepends projected patch embeddings with M-RoPE positions.  Modality
+frontends are stubs per the assignment: ``input_specs`` feeds precomputed
+frame/patch features through a single linear adapter.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_constraint
+
+from .blocks import (block_forward, block_prefill, block_step,
+                     init_block, init_block_cache)
+from .layers import (Param, apply_norm, dense, embed_lookup, init_dense,
+                     init_embed, init_norm, make_positions_mrope, unembed)
+
+__all__ = ["FRONTEND_DIM", "init_model", "forward", "loss_fn", "prefill",
+           "decode_step", "init_cache", "build_model"]
+
+# Stub modality frontends: precomputed features -> linear adapter.
+FRONTEND_DIM = {"audio": 80, "vision": 1176}
+
+
+def _dtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+        cfg.param_dtype]
+
+
+def _moe_flags(cfg):
+    assert not cfg.moe or cfg.period % cfg.moe_every == 0 \
+        or cfg.moe_every % cfg.period == 0, \
+        "MoE placement must be periodic within the scanned period"
+    return tuple(cfg.moe_at(j) for j in range(cfg.period))
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def _init_stack(key, cfg, kinds, moe_flags, n_stack: int, cross: bool):
+    """Init ``n_stack`` periods of blocks, params stacked on axis 0.
+
+    ``key=None`` -> spec-only (no arrays; see layers.Param).
+    """
+    dtype = _dtype(cfg)
+
+    # Specs are identical across the stack; trace once (spec-only, no
+    # allocation) and prepend the (replicated) layer axis.
+    probe = Param(None, dtype)
+    for j, kind in enumerate(kinds):
+        init_block(probe.sub(f"b{j}"), cfg, kind, moe_flags[j],
+                   cross=cross)
+    specs = jax.tree.map(lambda s: ("null",) + tuple(s), probe.specs,
+                         is_leaf=lambda s: isinstance(s, tuple))
+    if key is None:
+        return probe.params, specs
+
+    def init_one(k):
+        p = Param(k, dtype)
+        for j, kind in enumerate(kinds):
+            sub = p.sub(f"b{j}")
+            init_block(sub, cfg, kind, moe_flags[j], cross=cross)
+        return p.params
+
+    params = jax.vmap(init_one)(jax.random.split(key, n_stack))
+    return params, specs
+
+
+def init_model(cfg, key):
+    """Returns ``(params, specs)`` pytrees (see layers.Param).
+
+    ``key=None`` returns ``(None-leaved tree, specs)`` without touching
+    device memory — the dry-run path for 1T-param configs.
+    """
+    spec_only = key is None
+    p = Param(key, _dtype(cfg))
+    init_embed(p, cfg.vocab, cfg.d_model, cfg.tie_embeddings)
+    init_norm(p, "norm_f", cfg.d_model, cfg.norm)
+    if cfg.frontend:
+        init_dense(p, "frontend", FRONTEND_DIM[cfg.frontend],
+                   cfg.d_model, ("null", "fsdp"))
+    params, specs = p.done()
+
+    kinds = cfg.block_pattern
+    bp, bs = _init_stack(None if spec_only else jax.random.fold_in(key, 1),
+                         cfg, kinds, _moe_flags(cfg), cfg.n_periods,
+                         cross=cfg.enc_dec)
+    params["blocks"], specs["blocks"] = bp, bs
+
+    if cfg.enc_dec:
+        ep, es = _init_stack(
+            None if spec_only else jax.random.fold_in(key, 2), cfg,
+            ("attn",), (False,), cfg.n_enc_layers, cross=False)
+        params["enc_blocks"], specs["enc_blocks"] = ep, es
+        pe = Param(None if spec_only else jax.random.fold_in(key, 3),
+                   _dtype(cfg))
+        init_norm(pe, "norm_enc", cfg.d_model, cfg.norm)
+        params.update(pe.params)
+        specs.update(pe.specs)
+    return params, specs
+
+
+def param_specs(cfg):
+    """Logical sharding specs without allocating parameters."""
+    return init_model(cfg, None)[1]
+
+
+def abstract_params(cfg):
+    """ShapeDtypeStruct tree of the parameters (no allocation)."""
+    return jax.eval_shape(lambda: init_model(cfg, jax.random.PRNGKey(0))[0])
+
+
+# ----------------------------------------------------------------------
+# Input embedding (+ frontends)
+# ----------------------------------------------------------------------
+
+def _sinusoid(positions, d):
+    """(B, S) -> (B, S, d) fixed sinusoidal embedding (whisper-style)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10_000.0)
+                    * jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _embed_inputs(params, cfg, batch, dtype):
+    """Returns (x, positions, labels, label_mask)."""
+    tokens = batch["tokens"]
+    B, S_txt = tokens.shape
+    x = embed_lookup(params, tokens, impl=cfg.gather_impl,
+                     compute_dtype=dtype)
+    labels = batch.get("labels")
+    if cfg.frontend == "vision" and "patches" in batch:
+        patches = dense(params, "frontend", batch["patches"], dtype)
+        x = jnp.concatenate([patches, x], axis=1)
+        n_img = patches.shape[1]
+        g = max(1, int(math.sqrt(n_img)))
+        positions = make_positions_mrope(B, x.shape[1], n_img,
+                                         (g, max(1, n_img // g)))
+        if labels is not None:
+            labels = jnp.pad(labels, ((0, 0), (n_img, 0)),
+                             constant_values=-1)
+    else:
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1], dtype=jnp.int32),
+                               (B, x.shape[1]))
+        positions = (jnp.broadcast_to(pos, (3, B, x.shape[1]))
+                     if cfg.rope == "mrope" else pos)
+        if cfg.rope == "none":
+            x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    mask = (labels >= 0) if labels is not None else None
+    x = shard_constraint(x, ("batch", "sp_act", None))
+    return x, positions, labels, mask
+
+
+def _encode(params, cfg, batch, dtype):
+    frames = batch["frames"]
+    x = dense(params, "frontend", frames, dtype)
+    B, S = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    x = shard_constraint(x, ("batch", None, None))
+
+    def body(h, pp):
+        h, _ = block_forward(pp["b0"], cfg, "attn", False, h, pos,
+                             causal=False, dtype=dtype)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return apply_norm(params, "norm_enc", x, cfg.norm), pos
+
+
+# ----------------------------------------------------------------------
+# Forward / loss
+# ----------------------------------------------------------------------
+
+def forward(params, cfg, batch, *, moe_impl="scatter", remat=True):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    x, positions, labels, mask = _embed_inputs(params, cfg, batch, dtype)
+    enc_out = enc_pos = None
+    if cfg.enc_dec:
+        enc_out, enc_pos = _encode(params, cfg, batch, dtype)
+    kinds = cfg.block_pattern
+    moe_flags = _moe_flags(cfg)
+
+    def body(h, pp):
+        aux = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(kinds):
+            h, a = block_forward(pp[f"b{j}"], cfg, kind, moe_flags[j], h,
+                                 positions, cross=cfg.enc_dec,
+                                 enc_out=enc_out, enc_positions=enc_pos,
+                                 moe_impl=moe_impl, dtype=dtype)
+            aux = aux + a
+        # Megatron-SP: the residual stream (and with it every scan carry
+        # and remat save) rests sequence-sharded over the TP axis when
+        # rules.sp_act is set (hillclimb LM-2 iteration 4).
+        h = shard_constraint(h, ("batch", "sp_act", None))
+        return h, aux
+
+    scan_body = jax.checkpoint(body) if remat else body
+    x, auxs = jax.lax.scan(scan_body, x, params["blocks"])
+    x = apply_norm(params, "norm_f", x, cfg.norm)
+    logits = unembed(params, x, cfg.tie_embeddings, dtype)
+    logits = shard_constraint(logits, ("batch", None, "tp"))
+    return logits, jnp.sum(auxs)
+
+
+def loss_fn(params, cfg, batch, *, aux_weight=0.01, moe_impl="scatter",
+            remat=True):
+    logits, aux = forward(params, cfg, batch, moe_impl=moe_impl,
+                          remat=remat)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:      # vlm: patch positions
+        labels = jnp.pad(labels,
+                         ((0, 0), (logits.shape[1] - labels.shape[1], 0)),
+                         constant_values=-1)
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + aux_weight * aux, {"lm_loss": loss, "aux_loss": aux}
+
+
+# ----------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ----------------------------------------------------------------------
+
+def init_cache(cfg, batch: int, max_len: int, enc_len: int = 0):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    one = {
+        f"b{j}": init_block_cache(cfg, kind, batch, max_len,
+                                  cross=cfg.enc_dec, enc_len=enc_len,
+                                  dtype=dtype)
+        for j, kind in enumerate(cfg.block_pattern)
+    }
+    return {"blocks": jax.tree.map(
+        lambda a: jnp.tile(a[None], (cfg.n_periods,) + (1,) * a.ndim),
+        one)}
+
+
+def prefill(params, cfg, batch, max_len: int, *, moe_impl="scatter"):
+    """Run the prompt, return (last-position logits, filled cache)."""
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    x, positions, _, _ = _embed_inputs(params, cfg, batch, dtype)
+    enc_out = enc_pos = None
+    if cfg.enc_dec:
+        enc_out, enc_pos = _encode(params, cfg, batch, dtype)
+    kinds = cfg.block_pattern
+    moe_flags = _moe_flags(cfg)
+
+    def body(h, pp):
+        caches = {}
+        for j, kind in enumerate(kinds):
+            h, cache, _ = block_prefill(
+                pp[f"b{j}"], cfg, kind, moe_flags[j], h, positions,
+                max_len, cross=cfg.enc_dec, enc_out=enc_out,
+                enc_positions=enc_pos, moe_impl=moe_impl, dtype=dtype)
+            caches[f"b{j}"] = cache
+        return h, caches
+
+    x, caches = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(params, "norm_f", x, cfg.norm)
+    logits = unembed(params, x[:, -1:], cfg.tie_embeddings, dtype)
+    return logits, {"blocks": caches}
+
+
+def decode_step(params, cfg, cache, tokens, index, *,
+                moe_impl="scatter"):
+    """One token for the whole batch.  ``tokens``: (B, 1) int32."""
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    x = embed_lookup(params, tokens, impl=cfg.gather_impl,
+                     compute_dtype=dtype)
+    if cfg.rope == "none":
+        pos = jnp.full(tokens.shape, index, jnp.int32)
+        x = x + _sinusoid(pos, cfg.d_model).astype(x.dtype)
+    kinds = cfg.block_pattern
+    moe_flags = _moe_flags(cfg)
+
+    def body(h, scanned):
+        pp, cc = scanned
+        new_cc = {}
+        for j, kind in enumerate(kinds):
+            h, nc = block_step(pp[f"b{j}"], cfg, kind, moe_flags[j], h,
+                               cc[f"b{j}"], index, cross=cfg.enc_dec,
+                               moe_impl=moe_impl, dtype=dtype)
+            new_cc[f"b{j}"] = nc
+        return h, new_cc
+
+    x, new_caches = jax.lax.scan(body, x,
+                                 (params["blocks"], cache["blocks"]))
+    x = apply_norm(params, "norm_f", x, cfg.norm)
+    logits = unembed(params, x, cfg.tie_embeddings, dtype)
+    return logits, {"blocks": new_caches}
+
+
+# ----------------------------------------------------------------------
+
+class Model:
+    """Thin OO facade bundling (cfg, params, specs) for launchers."""
+
+    def __init__(self, cfg, params, specs):
+        self.cfg = cfg
+        self.params = params
+        self.specs = specs
+
+    def __repr__(self):
+        n = self.cfg.param_count()
+        return (f"Model({self.cfg.name}, {n / 1e6:.1f}M params, "
+                f"family={self.cfg.family})")
+
+
+def build_model(cfg, key=None) -> Model:
+    key = jax.random.PRNGKey(0) if key is None else key
+    params, specs = init_model(cfg, key)
+    return Model(cfg, params, specs)

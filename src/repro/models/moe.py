@@ -1,0 +1,345 @@
+"""Mixture-of-Experts layer — gather-strategy consumer #2.
+
+Token->expert dispatch *is* a scattered gather (the paper's Part 2 in LM
+clothing): tokens are scattered into per-expert buffers, expert FFNs run
+as dense batched einsums, results gather back.  Two dispatch
+implementations with identical semantics:
+
+``scatter`` (default, shape-static, scales to 384 experts)
+    position-in-expert via cumsum over a (N, E) one-hot, then
+    ``scatter-add`` into an ``(E, C, d)`` buffer and a ``take`` back.
+    On TPU the scatter/gather HLOs cross the EP shards, which GSPMD turns
+    into collectives — the dominant collective term of the MoE cells
+    (EXPERIMENTS.md §Roofline) and the target of hillclimb LM-2.
+``einsum``
+    GShard-style dense dispatch mask ``(N, E, C)`` einsums — zero
+    gather/scatter HLOs (the MoE analogue of the one-hot MXU trick).
+    Memory O(N*E*C); used for small expert counts and as the semantic
+    cross-check oracle in tests.
+
+Capacity ``C = ceil(top_k * N / E * capacity_factor)``; overflow tokens
+drop (standard), underflow slots compute zeros.  Router in fp32, aux
+load-balance loss per Switch-Transformer.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_constraint
+
+from .layers import Param, activation
+
+__all__ = ["init_moe", "moe_forward", "moe_capacity"]
+
+
+def init_moe(p: Param, cfg):
+    d, ff, E = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    p.add("router", (d, E), (None, "ep"), scale=1.0 / math.sqrt(d))
+    p.add("w_gate", (E, d, ff), ("ep", "fsdp", None),
+          scale=1.0 / math.sqrt(d))
+    p.add("w_up", (E, d, ff), ("ep", "fsdp", None),
+          scale=1.0 / math.sqrt(d))
+    p.add("w_down", (E, ff, d), ("ep", None, "fsdp"),
+          scale=1.0 / math.sqrt(ff))
+
+
+def moe_capacity(cfg, n_tokens: int) -> int:
+    c = math.ceil(cfg.top_k * n_tokens / cfg.n_experts
+                  * cfg.capacity_factor)
+    return max(8, -(-c // 8) * 8)     # round up to a sublane multiple
+
+
+def _route(params, cfg, xf):
+    """Router logits -> (gates, idx) with renormalised top-k weights."""
+    logits = xf @ params["router"].astype(jnp.float32)      # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)            # (N, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return probs, gates, idx
+
+
+def _aux_loss(cfg, probs, idx):
+    """Switch load-balance loss: E * sum_e f_e * P_e."""
+    E = cfg.n_experts
+    counts = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = counts / jnp.maximum(idx.size, 1)
+    P = probs.mean(axis=0)
+    return E * jnp.sum(f * P)
+
+
+def _expert_ffn(params, cfg, buf, dtype):
+    """Batched expert FFNs.  ``buf``: (E, C, d) -> (E, C, d)."""
+    act = activation("swiglu")
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"].astype(dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["w_up"].astype(dtype))
+    h = act(g) * u
+    h = shard_constraint(h, ("ep", None, None))
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(dtype))
+
+
+def moe_forward(params, cfg, x, *, impl: str = "scatter",
+                dtype=jnp.bfloat16, groups: int | None = None):
+    """MoE FFN.  ``x``: (B, S, d) -> ((B, S, d), aux_loss).
+
+    ``impl="grouped"`` adds GShard-style dispatch groups sized to the
+    data-parallel shard count: capacity accounting is per group, so the
+    scatter into the ``(E, G, C/G, d)`` buffer never crosses the batch
+    shards (hillclimb LM-2 iteration 2).  Semantics differ from
+    ``scatter`` only in *which* tokens drop under overflow (per-group
+    instead of global waterline), the standard GShard trade.
+    """
+    B, S, d = x.shape
+    N = B * S
+    xt = x.reshape(N, d)
+    xf = xt.astype(jnp.float32)
+    C = moe_capacity(cfg, N)
+    E, k = cfg.n_experts, cfg.top_k
+
+    probs, gates, idx = _route(params, cfg, xf)
+    aux = _aux_loss(cfg, probs, idx)
+
+    if impl == "grouped":
+        return _moe_grouped(params, cfg, x, xt, gates, idx, C, aux,
+                            dtype, groups)
+    if impl == "ep":
+        out = _moe_manual_ep(params, cfg, x, dtype)
+        if out is not None:
+            return out
+        impl = "scatter"             # no mesh context -> local fallback
+
+    if impl == "einsum":
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)   # (N, k, E)
+        sel = onehot.sum(1)                                  # (N, E)
+        pos = (jnp.cumsum(sel, axis=0) - sel)                # pre-count
+        pos_k = jnp.einsum("nke,ne->nk", onehot, pos)        # (N, k)
+        keep = pos_k < C
+        slot = jax.nn.one_hot(jnp.where(keep, pos_k, C), C,
+                              dtype=jnp.float32)             # (N, k, C)
+        disp = jnp.einsum("nke,nkc->nec", onehot, slot)      # (N, E, C)
+        buf = jnp.einsum("nec,nd->ecd", disp, xf).astype(dtype)
+        out_buf = _expert_ffn(params, cfg, buf, dtype).astype(jnp.float32)
+        comb = jnp.einsum("nec,nk,nke->nec", disp,
+                          gates, onehot)
+        y = jnp.einsum("nec,ecd->nd", comb, out_buf)
+        return y.reshape(B, S, d).astype(x.dtype), aux
+
+    if impl != "scatter":
+        raise ValueError(f"unknown moe impl {impl!r}")
+
+    # ---- scatter path -------------------------------------------------
+    # Position-in-expert via sort-based ranking: O(N*k) memory.  (The
+    # textbook cumsum-of-one-hot builds an (N*k, E) tensor — 4.3 GB of
+    # s32 per layer for the qwen3/kimi cells, which GSPMD then
+    # all-gathers; hillclimb LM-2 iteration 1 in EXPERIMENTS.md §Perf
+    # replaced it with this formulation.)
+    e_flat = idx.reshape(-1)                                 # (N*k,)
+    nk = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)                 # (N*k,)
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(
+        1, mode="drop")                                      # (E,)
+    starts = jnp.cumsum(counts) - counts                     # (E,)
+    pos_sorted = (jnp.arange(nk, dtype=jnp.int32)
+                  - starts[e_flat[order]])
+    pos_flat = jnp.zeros((nk,), jnp.int32).at[order].set(
+        pos_sorted, mode="drop")
+    keep = pos_flat < C
+    slot = jnp.where(keep, e_flat * C + pos_flat, E * C)     # drop -> OOB
+    tok = jnp.repeat(jnp.arange(N), k)
+
+    src = xt[tok].astype(dtype) * keep[:, None].astype(dtype)
+    buf = jnp.zeros((E * C + 1, d), dtype)
+    buf = buf.at[slot].add(src, mode="drop")
+    buf = buf[:E * C].reshape(E, C, d)
+    buf = shard_constraint(buf, ("ep", None, None))
+
+    out_buf = _expert_ffn(params, cfg, buf, dtype)
+
+    # Combine in the compute dtype end-to-end: the fp32 variant doubles
+    # the backward scatter-add collective (LM-2 iteration 1b).
+    rows = out_buf.reshape(E * C, d)
+    gk = (gates.reshape(-1) * keep).astype(dtype)
+    got = jnp.take(rows, jnp.clip(slot, 0, E * C - 1), axis=0)
+    y = (got * gk[:, None]).reshape(N, k, d)
+    y = y.astype(jnp.float32).sum(1)                         # k-sum in f32
+    return y.reshape(B, S, d).astype(x.dtype), aux
+
+
+def _positions_in_expert(e_flat, E: int):
+    """Sort-based position-in-expert ranking (O(N*k) memory)."""
+    nk = e_flat.shape[0]
+    order = jnp.argsort(e_flat, stable=True)
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1, mode="drop")
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(nk, dtype=jnp.int32) - starts[e_flat[order]]
+    return jnp.zeros((nk,), jnp.int32).at[order].set(
+        pos_sorted, mode="drop")
+
+
+def _moe_manual_ep(params, cfg, x, dtype):
+    """Manual expert parallelism via shard_map (hillclimb LM-2 iter 3).
+
+    GSPMD resolves the cross-shard dispatch scatter by replicating the
+    (E, C, d) buffer and all-reducing it — tens of GB per layer for the
+    qwen3/kimi cells (EXPERIMENTS.md §Perf).  The manual schedule
+    exploits two facts GSPMD cannot see:
+
+    * activations are *replicated* over the EP (model) axis, so every
+      EP shard can locally scatter the tokens bound for **its** experts
+      — dispatch needs zero communication;
+    * the top-k combine is a sum over experts, so one bf16 ``psum`` of
+      the (N_local, d) output over the EP axis finishes the job —
+      ``N*d`` moved instead of ``E*C*d`` replicate+reduce.
+
+    Per-shard capacity is ``C_local = ceil(k * N_local / E * cf)`` —
+    group-local dropping, the same semantics change as GShard groups.
+    Falls back to the portable scatter path when no mesh context is
+    active (single-device tests).
+    """
+    from repro.dist.sharding import (_CTX, logical_to_spec, valid_spec)
+
+    ctx = _CTX.get()
+    if ctx is None:
+        return None
+    mesh, rules = ctx
+    ep_axes = tuple(a for a in rules.ep if a in mesh.axis_names)
+    batch_axes = tuple(a for a in rules.batch if a in mesh.axis_names)
+    ep_size = 1
+    for a in ep_axes:
+        ep_size *= mesh.shape[a]
+    if ep_size == 1 or cfg.n_experts % ep_size:
+        return None
+
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // ep_size
+
+    def pspec_of(shape, logical):
+        return valid_spec(shape, logical_to_spec(logical, rules, mesh),
+                          mesh)
+
+    param_specs = {
+        "router": pspec_of(params["router"].shape, (None, "ep")),
+        "w_gate": pspec_of(params["w_gate"].shape, ("ep", "fsdp", None)),
+        "w_up": pspec_of(params["w_up"].shape, ("ep", "fsdp", None)),
+        "w_down": pspec_of(params["w_down"].shape, ("ep", None, "fsdp")),
+    }
+    x_spec = pspec_of(x.shape, ("batch", None, None))
+
+    def fsdp_gather(w, spec, axis):
+        """Materialise the fsdp-sharded param dim inside the manual
+        region (the same per-layer all-gather GSPMD pays for ZeRO-3).
+        PartitionSpecs trim trailing Nones, so the axis may be absent."""
+        entry = spec[axis] if axis < len(spec) else None
+        for a in reversed(entry if isinstance(entry, tuple)
+                          else (entry,)):
+            if a is not None:
+                w = jax.lax.all_gather(w, a, axis=axis, tiled=True)
+        return w
+
+    def body(p, x_loc):
+        Nl = x_loc.shape[0] * x_loc.shape[1]
+        xt = x_loc.reshape(Nl, d)
+        # Router: gather the expert dim (tiny) for a full top-k.
+        router = p["router"]
+        for a in reversed(ep_axes):
+            router = jax.lax.all_gather(router, a, axis=1, tiled=True)
+        logits = xt.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gates, idx = jax.lax.top_k(probs, k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        aux = _aux_loss(cfg, probs, idx)
+        for a in batch_axes:
+            aux = jax.lax.pmean(aux, a)
+
+        # Local experts only: offset of this EP shard.
+        off = jnp.int32(0)
+        stride = E_loc
+        for a in reversed(ep_axes):
+            off = off + jax.lax.axis_index(a) * stride
+            stride *= mesh.shape[a]
+        e_flat = idx.reshape(-1)
+        local = (e_flat >= off) & (e_flat < off + E_loc)
+        e_loc = jnp.where(local, e_flat - off, E_loc)
+        C_loc = moe_capacity(cfg, Nl)
+        pos = _positions_in_expert(e_loc, E_loc + 1)
+        keep = local & (pos < C_loc)
+        slot = jnp.where(keep, e_loc * C_loc + pos, E_loc * C_loc)
+        tok = jnp.repeat(jnp.arange(Nl), k)
+        src = (xt[tok].astype(dtype)
+               * keep[:, None].astype(dtype))
+        buf = jnp.zeros((E_loc * C_loc + 1, d), dtype)
+        buf = buf.at[slot].add(src, mode="drop")
+        buf = buf[:E_loc * C_loc].reshape(E_loc, C_loc, d)
+
+        wg = fsdp_gather(p["w_gate"], param_specs["w_gate"], 1)
+        wu = fsdp_gather(p["w_up"], param_specs["w_up"], 1)
+        wd = fsdp_gather(p["w_down"], param_specs["w_down"], 2)
+        g = jnp.einsum("ecd,edf->ecf", buf, wg.astype(dtype))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(dtype))
+        h = jax.nn.silu(g) * u
+        out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(dtype))
+
+        rows = out_buf.reshape(E_loc * C_loc, d)
+        gk = (gates.reshape(-1) * keep).astype(dtype)
+        got = jnp.take(rows, jnp.clip(slot, 0, E_loc * C_loc - 1),
+                       axis=0)
+        y = (got * gk[:, None]).reshape(Nl, k, d)
+        y = y.astype(jnp.float32).sum(1)
+        # One bf16 psum over the EP axis combines all experts.
+        y = y.astype(dtype)
+        for a in ep_axes:
+            y = jax.lax.psum(y, a)
+        return y.reshape(x_loc.shape).astype(x_loc.dtype), aux
+
+    wrapped = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(param_specs, x_spec),
+        out_specs=(x_spec, jax.sharding.PartitionSpec()),
+        check_vma=False)
+    moe_params = {n: params[n] for n in param_specs}
+    return wrapped(moe_params, x)
+
+
+def _moe_grouped(params, cfg, x, xt, gates, idx, C, aux, dtype,
+                 groups):
+    """Group-local dispatch: buffer (E, G, C/G, d), G aligned to the
+    batch shards so scatter/gather stay shard-local on the data axis."""
+    B, S, d = x.shape
+    N = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    G = groups or 32
+    G = min(G, N)
+    while N % G:
+        G -= 1
+    Cg = max(8, -(-C // G) // 8 * 8)
+    Ng = N // G
+
+    e_g = idx.reshape(G, Ng * k)                       # group-major
+    pos_g = jax.vmap(lambda e: _positions_in_expert(e, E))(e_g)
+    keep = pos_g < Cg                                  # (G, Ng*k)
+    # slot within (E, G, Cg) flattened buffer (+1 overflow row)
+    slot = jnp.where(keep, (e_g * G + jnp.arange(G)[:, None]) * Cg
+                     + pos_g, E * G * Cg)
+    tok = jnp.repeat(jnp.arange(N).reshape(G, Ng), k, axis=1)
+
+    src = (xt[tok.reshape(-1)].astype(dtype)
+           * keep.reshape(-1)[:, None].astype(dtype))
+    buf = jnp.zeros((E * G * Cg + 1, d), dtype)
+    buf = buf.at[slot.reshape(-1)].add(src, mode="drop")
+    buf = buf[:E * G * Cg].reshape(E, G * Cg, d)
+    buf = shard_constraint(buf, ("ep", "fsdp", None))
+
+    out_buf = _expert_ffn(params, cfg, buf, dtype)
+    out_buf = shard_constraint(out_buf, ("ep", "fsdp", None))
+
+    rows = out_buf.reshape(E * G * Cg, d)
+    gk = (gates.reshape(G, Ng * k) * keep).astype(dtype)
+    got = jnp.take(rows, jnp.clip(slot.reshape(-1), 0,
+                                  E * G * Cg - 1), axis=0)
+    y = (got * gk.reshape(-1)[:, None]).reshape(N, k, d)
+    y = y.astype(jnp.float32).sum(1)
+    return y.reshape(B, S, d).astype(x.dtype), aux

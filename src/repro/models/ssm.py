@@ -1,0 +1,381 @@
+"""SSM blocks: Mamba (S6) and xLSTM (mLSTM / sLSTM).
+
+These are the *streaming* architectures of the zoo — the Part-1-like
+workloads of the paper's taxonomy (pure elementwise/matmul dataflow, no
+scattered access), which is why ``long_500k`` runs only for them: decode
+carries O(1) recurrent state instead of a KV cache.
+
+Implementation notes
+--------------------
+* **Mamba** follows the S6 recurrence ``h_t = exp(dt*A) h_{t-1} + dt*B x``
+  with input-dependent (selective) ``B, C, dt``.  Training/prefill uses a
+  chunked scan: ``lax.scan`` over sequence chunks with an associative scan
+  inside each chunk — peak activation memory is ``O(B * chunk * d_inner *
+  d_state)`` per device instead of ``O(B * S * ...)``, the same memory
+  shape the official CUDA kernel achieves by fusion (hardware adaptation
+  note in DESIGN.md: the TPU-native form is scan-blocking, not a fused
+  SRAM kernel).
+* **mLSTM** uses the chunkwise-parallel form: within a chunk the matrix
+  memory is applied as decayed attention; across chunks a recurrent
+  ``(hd x hd)`` state ``C`` and normaliser ``n`` are carried with
+  max-stabilised exponential gates (arXiv:2405.04517, eqs. 19-27).
+* **sLSTM** is inherently sequential (scalar memory mixing across the
+  head dim); it scans one step per token.  Cheap per step; xlstm-125m
+  places it on every second block.
+
+``d_inner`` is ``tp``-sharded; all recurrences are batch-parallel.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_constraint
+
+from .layers import Param, dense, init_dense
+
+__all__ = [
+    "init_mamba", "mamba_forward", "mamba_step", "init_mamba_cache",
+    "init_mlstm", "mlstm_forward", "mlstm_step", "init_mlstm_cache",
+    "init_slstm", "slstm_forward", "slstm_step", "init_slstm_cache",
+]
+
+
+# ======================================================================
+# Mamba (S6)
+# ======================================================================
+
+def init_mamba(p: Param, cfg):
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.d_state
+    init_dense(p, "in_proj", d, 2 * di, ("fsdp", "tp"))
+    p.add("conv_w", (cfg.d_conv, di), (None, "tp"),
+          scale=1.0 / math.sqrt(cfg.d_conv))
+    p.add("conv_b", (di,), ("tp",), init="zeros")
+    init_dense(p, "x_proj", di, 2 * ds + 1, ("tp", None))
+    p.add("dt_bias", (di,), ("tp",), init="zeros")
+    p.add("A_log", (di, ds), ("tp", None), init="ones")
+    p.add("D", (di,), ("tp",), init="ones")
+    init_dense(p, "out_proj", di, d, ("tp", "fsdp"))
+
+
+def _mamba_conv(x, w, b, carry=None):
+    """Depthwise causal conv along seq.  ``x``: (B, S, di)."""
+    K = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros(x.shape[:1] + (K - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = carry
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_carry = xp[:, -(K - 1):] if K > 1 else pad
+    return out + b, new_carry
+
+
+def _ssm_scan_chunk(dA, dBx, h0):
+    """Associative scan of ``h_t = dA_t * h_{t-1} + dBx_t`` over a chunk.
+
+    ``dA``, ``dBx``: (B, C, di, ds); ``h0``: (B, di, ds).
+    Returns (states (B, C, di, ds), h_last).
+    """
+    def combine(a, b):
+        return (a[0] * b[0], b[0] * a[1] + b[1])
+
+    A, Bx = jax.lax.associative_scan(combine, (dA, dBx), axis=1)
+    states = A * h0[:, None] + Bx
+    return states, states[:, -1]
+
+
+def mamba_forward(params, cfg, x, *, chunk: int = 256,
+                  dtype=jnp.bfloat16, return_state: bool = False):
+    """Full-sequence selective SSM.  ``x``: (B, S, d) -> (B, S, d).
+
+    ``return_state=True`` additionally returns the decode cache after the
+    last token (prefill path).  ``chunk`` trades inter-chunk carry I/O
+    against in-chunk associative-scan memory; 256 measured best on the
+    jamba train cell (64/128/256 -> memory term 75.8/56.7/47.8 s,
+    EXPERIMENTS.md §Perf).
+    """
+    B, S, _ = x.shape
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = dense(params, "in_proj", x, dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shard_constraint(xi, ("batch", None, "tp"))
+    xi, conv_tail = _mamba_conv(xi, params["conv_w"].astype(dtype),
+                                params["conv_b"].astype(dtype))
+    xi = jax.nn.silu(xi)
+
+    bcd = dense(params, "x_proj", xi, dtype).astype(jnp.float32)
+    Bm, Cm, dt = (bcd[..., :ds], bcd[..., ds:2 * ds], bcd[..., -1:])
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))      # (di, ds)
+    xf = xi.astype(jnp.float32)
+
+    if S % chunk:
+        chunk = S                                          # smoke tests
+    n_chunks = S // chunk
+
+    def seq_chunks(a):
+        return a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+
+    def step(h, blk):
+        xb, Bb, Cb, dtb = blk        # (B,C,di), (B,C,ds), (B,C,ds), (B,C,di)
+        dA = jnp.exp(dtb[..., None] * A)                   # (B,C,di,ds)
+        dBx = (dtb * xb)[..., None] * Bb[:, :, None, :]
+        states, h_last = _ssm_scan_chunk(dA, dBx, h)
+        y = jnp.einsum("bcds,bcs->bcd", states, Cb)
+        return h_last, y
+
+    h0 = jnp.zeros((B, di, ds), jnp.float32)
+    h_last, ys = jax.lax.scan(step, h0, (seq_chunks(xf), seq_chunks(Bm),
+                                         seq_chunks(Cm), seq_chunks(dt)))
+    y = ys.swapaxes(0, 1).reshape(B, S, di)
+    y = y + xf * params["D"].astype(jnp.float32)
+    y = (y.astype(dtype)) * jax.nn.silu(z)
+    out = dense(params, "out_proj", y, dtype)
+    if return_state:
+        return out, {"conv": conv_tail.astype(jnp.float32), "h": h_last}
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), dtype),
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.d_state), jnp.float32),
+    }
+
+
+def mamba_step(params, cfg, x, cache, *, dtype=jnp.bfloat16):
+    """Single-token recurrent step.  ``x``: (B, 1, d)."""
+    di, ds = cfg.d_inner, cfg.d_state
+    xz = dense(params, "in_proj", x, dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, conv_carry = _mamba_conv(xi, params["conv_w"].astype(dtype),
+                                 params["conv_b"].astype(dtype),
+                                 carry=cache["conv"].astype(dtype))
+    xi = jax.nn.silu(xi)
+    bcd = dense(params, "x_proj", xi, dtype).astype(jnp.float32)
+    Bm, Cm, dt = bcd[..., :ds], bcd[..., ds:2 * ds], bcd[..., -1:]
+    dt = jax.nn.softplus(dt + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xf = xi.astype(jnp.float32)[:, 0]                       # (B, di)
+    dA = jnp.exp(dt[:, 0, :, None] * A)                     # (B?, di, ds)
+    h = cache["h"] * dA + (dt[:, 0] * xf)[..., None] * Bm[:, 0, None, :]
+    y = jnp.einsum("bds,bs->bd", h, Cm[:, 0])[:, None]
+    y = y + xf[:, None] * params["D"].astype(jnp.float32)
+    y = y.astype(dtype) * jax.nn.silu(z)
+    out = dense(params, "out_proj", y, dtype)
+    return out, {"conv": conv_carry.astype(cache["conv"].dtype), "h": h}
+
+
+# ======================================================================
+# mLSTM (matrix LSTM, chunkwise-parallel)
+# ======================================================================
+
+def init_mlstm(p: Param, cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    init_dense(p, "qkv", d, 3 * di, ("fsdp", "tp"))
+    init_dense(p, "gates", d, 2 * cfg.n_heads, ("fsdp", "tp"))
+    init_dense(p, "up", d, di, ("fsdp", "tp"))
+    init_dense(p, "out_proj", di, d, ("tp", "fsdp"))
+
+
+def _mlstm_heads(cfg, t):
+    B, S, di = t.shape
+    H = cfg.n_heads
+    return t.reshape(B, S, H, di // H)
+
+
+def mlstm_forward(params, cfg, x, *, chunk: int = 128,
+                  dtype=jnp.bfloat16, return_state: bool = False):
+    """Chunkwise-parallel mLSTM.  ``x``: (B, S, d) -> (B, S, d)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    di = cfg.d_inner
+    hd = di // H
+    qkv = dense(params, "qkv", x, dtype)
+    q, k, v = (_mlstm_heads(cfg, t) for t in jnp.split(qkv, 3, axis=-1))
+    gates = dense(params, "gates", x, dtype).astype(jnp.float32)
+    ig, fg = jnp.split(gates, 2, axis=-1)                  # (B, S, H)
+    logf = -jax.nn.softplus(-fg)                           # log sigmoid
+
+    if S % chunk:
+        chunk = S
+    n = S // chunk
+
+    def to_chunks(t):
+        return t.reshape(B, n, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = (to_chunks(t.astype(jnp.float32)) for t in (q, k, v))
+    ic, fc = to_chunks(ig), to_chunks(logf)
+    scale = 1.0 / math.sqrt(hd)
+
+    def step(carry, blk):
+        C, nvec, m = carry               # (B,H,hd,hd), (B,H,hd), (B,H)
+        qb, kb, vb, ib, fb = blk
+        csum = jnp.cumsum(fb, axis=1)                      # (B, C, H)
+        total = csum[:, -1]
+        # Stabiliser: since log-sigmoid forget gates are <= 0, every
+        # exponent below (intra dmat, inter decay, state update) is
+        # bounded by max(m, max_k ig_k) — one chunk-level stabiliser
+        # suffices (xLSTM eq. 19-27 adapted to chunkwise form).
+        m_new = jnp.maximum(m, jnp.max(ib, axis=1))
+        # Intra-chunk decayed attention.
+        dmat = (csum[:, :, None] - csum[:, None, :]
+                + ib[:, None, :])                           # (B,Cq,Ck,H)
+        qi = jnp.arange(chunk)
+        causal = qi[:, None] >= qi[None, :]
+        dmat = jnp.where(causal[None, :, :, None],
+                         dmat - m_new[:, None, None, :], -jnp.inf)
+        att = jnp.einsum("bqhd,bkhd->bqkh", qb, kb) * scale
+        w = att * jnp.exp(dmat)
+        intra = jnp.einsum("bqkh,bkhd->bqhd", w, vb)
+        # Inter-chunk: apply carried state with decay to each position.
+        dec = jnp.exp(csum + m[:, None] - m_new[:, None])   # (B,C,H)
+        inter = jnp.einsum("bqhd,bhde->bqhe", qb * dec[..., None], C) \
+            * scale
+        norm = jnp.einsum("bqkh->bqh", w) \
+            + jnp.einsum("bqhd,bhd->bqh", qb * dec[..., None], nvec) \
+            * scale
+        y = (intra + inter) / jnp.maximum(
+            jnp.abs(norm)[..., None], jnp.exp(-m_new)[:, None, ..., None])
+        # State update for the next chunk: position k decays by the
+        # remaining chunk gates, exponent ig_k + (total - csum_k) - m_new.
+        kdec = jnp.exp(ib + total[:, None] - csum - m_new[:, None])
+        C_new = C * jnp.exp(total + m - m_new)[..., None, None] \
+            + jnp.einsum("bkhd,bkhe->bhde", kb * kdec[..., None], vb)
+        n_new = nvec * jnp.exp(total + m - m_new)[..., None] \
+            + jnp.einsum("bkhd->bhd", kb * kdec[..., None])
+        return (C_new, n_new, m_new), y
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    (Cf, nf, mf), ys = jax.lax.scan(step, (C0, n0, m0),
+                                    (qc, kc, vc, ic, fc))
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(dtype)
+    y = y * jax.nn.silu(dense(params, "up", x, dtype))
+    out = dense(params, "out_proj", y, dtype)
+    if return_state:
+        return out, {"C": Cf, "n": nf, "m": mf}
+    return out
+
+
+def init_mlstm_cache(cfg, batch: int, dtype=jnp.float32):
+    H = cfg.n_heads
+    hd = cfg.d_inner // H
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "m": jnp.full((batch, H), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_step(params, cfg, x, cache, *, dtype=jnp.bfloat16):
+    """O(1)-state decode step (the reason xlstm runs ``long_500k``)."""
+    B = x.shape[0]
+    H = cfg.n_heads
+    di = cfg.d_inner
+    hd = di // H
+    qkv = dense(params, "qkv", x, dtype)
+    q, k, v = (_mlstm_heads(cfg, t)[:, 0].astype(jnp.float32)
+               for t in jnp.split(qkv, 3, axis=-1))        # (B, H, hd)
+    gates = dense(params, "gates", x, dtype).astype(jnp.float32)[:, 0]
+    ig, fg = jnp.split(gates, 2, axis=-1)                  # (B, H)
+    logf = -jax.nn.softplus(-fg)
+    C, nvec, m = cache["C"], cache["n"], cache["m"]
+    m_new = jnp.maximum(logf + m, ig)
+    fdec = jnp.exp(logf + m - m_new)
+    idec = jnp.exp(ig - m_new)
+    C_new = C * fdec[..., None, None] \
+        + idec[..., None, None] * k[..., :, None] * v[..., None, :]
+    n_new = nvec * fdec[..., None] + idec[..., None] * k
+    scale = 1.0 / math.sqrt(hd)
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new) * scale
+    den = jnp.einsum("bhd,bhd->bh", q, n_new) * scale
+    y = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    y = y.reshape(B, 1, di).astype(dtype)
+    y = y * jax.nn.silu(dense(params, "up", x, dtype))
+    out = dense(params, "out_proj", y, dtype)
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ======================================================================
+# sLSTM (scalar memory, sequential)
+# ======================================================================
+
+def init_slstm(p: Param, cfg):
+    d, di = cfg.d_model, cfg.d_inner
+    init_dense(p, "zifo", d, 4 * di, ("fsdp", "tp"))
+    p.add("r_zifo", (4, di), (None, "tp"),
+          scale=1.0 / math.sqrt(di))                       # diag recurrence
+    init_dense(p, "out_proj", di, d, ("tp", "fsdp"))
+
+
+def _slstm_cell(zifo, r, state):
+    """One sLSTM step with exponential gating (per-feature recurrence)."""
+    c, nvec, h, m = state
+    z_in, i_in, f_in, o_in = jnp.split(zifo, 4, axis=-1)
+    z = jnp.tanh(z_in + r[0] * h)
+    ig = i_in + r[1] * h
+    fg = f_in + r[2] * h
+    o = jax.nn.sigmoid(o_in + r[3] * h)
+    logf = -jax.nn.softplus(-fg)
+    m_new = jnp.maximum(logf + m, ig)
+    c_new = c * jnp.exp(logf + m - m_new) + jnp.exp(ig - m_new) * z
+    n_new = nvec * jnp.exp(logf + m - m_new) + jnp.exp(ig - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new)
+
+
+def slstm_forward(params, cfg, x, *, dtype=jnp.bfloat16,
+                  return_state: bool = False, unroll: int = 1):
+    """Sequential scan over tokens.  ``x``: (B, S, d).
+
+    ``unroll`` was hillclimb LM-1 iteration 1 (amortise carry traffic by
+    unrolling the recurrence): REFUTED — XLA does not fuse across the
+    sequential dependency chain, measured bytes dropped only 2% while
+    compile time grew 27x, so the default stays 1 (EXPERIMENTS.md §Perf).
+    The real fix is the fused VMEM-resident kernel in
+    ``repro.kernels.slstm``.
+    """
+    B, S, _ = x.shape
+    di = cfg.d_inner
+    zifo = dense(params, "zifo", x, dtype).astype(jnp.float32)
+    r = params["r_zifo"].astype(jnp.float32)
+
+    def step(state, zt):
+        new = _slstm_cell(zt, r, state)
+        return new, new[2]
+
+    init = tuple(jnp.zeros((B, di), jnp.float32) for _ in range(3)) \
+        + (jnp.full((B, di), -jnp.inf, jnp.float32),)
+    (c, nv, h, m), hs = jax.lax.scan(step, init, zifo.swapaxes(0, 1),
+                                     unroll=min(unroll, S))
+    y = hs.swapaxes(0, 1).astype(dtype)
+    out = dense(params, "out_proj", y, dtype)
+    if return_state:
+        return out, {"c": c, "n": nv, "h": h, "m": m}
+    return out
+
+
+def init_slstm_cache(cfg, batch: int, dtype=jnp.float32):
+    di = cfg.d_inner
+    return {
+        "c": jnp.zeros((batch, di), jnp.float32),
+        "n": jnp.zeros((batch, di), jnp.float32),
+        "h": jnp.zeros((batch, di), jnp.float32),
+        "m": jnp.full((batch, di), -jnp.inf, jnp.float32),
+    }
+
+
+def slstm_step(params, cfg, x, cache, *, dtype=jnp.bfloat16):
+    zifo = dense(params, "zifo", x, dtype).astype(jnp.float32)[:, 0]
+    r = params["r_zifo"].astype(jnp.float32)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, nv, h, m = _slstm_cell(zifo, r, state)
+    y = h[:, None].astype(dtype)
+    out = dense(params, "out_proj", y, dtype)
+    return out, {"c": c, "n": nv, "h": h, "m": m}

@@ -1,0 +1,3 @@
+"""Serving: batched prefill/decode engine with slot scheduling."""
+
+from .engine import Request, ServingEngine  # noqa: F401

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train step, schedules."""
+
+from .optim import AdamWConfig, adamw_update, init_opt_state  # noqa: F401
+from .train import make_train_step  # noqa: F401

@@ -1,0 +1,85 @@
+"""Train-step factory: loss + grad + AdamW under pjit.
+
+``make_train_step`` builds the jittable ``(params, opt_state, batch) ->
+(params, opt_state, metrics)`` function every launcher and the dry-run
+lower.  Gradient-accumulation microbatching and int8 gradient
+compression (DP axis) are composable options; remat is per block-period
+inside the model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import loss_fn
+
+from .optim import AdamWConfig, adamw_update
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, *, moe_impl="scatter",
+                    remat=True, accum_steps: int = 1):
+    """Returns ``train_step(params, opt_state, batch)``.
+
+    ``accum_steps > 1`` splits the batch on axis 0 into microbatches and
+    accumulates grads in fp32 (classic memory/throughput trade; the
+    dry-run's hillclimbs sweep it).
+    """
+
+    def loss_of(p, b):
+        return loss_fn(p, cfg, b, moe_impl=moe_impl, remat=remat)
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def micro(b):
+            return jax.tree.map(
+                lambda x: x.reshape((accum_steps,
+                                     x.shape[0] // accum_steps)
+                                    + x.shape[1:]), b)
+
+        mb = micro(batch)
+
+        def body(carry, b):
+            loss_acc, grads_acc = carry
+            (loss, metrics), grads = grad_fn(params, b)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+            return (loss_acc + loss, grads_acc), metrics
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grads), metrics = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), mb)
+        grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        metrics = jax.tree.map(lambda m: m[-1], metrics)
+        return loss_sum / accum_steps, metrics, grads
+
+    def train_step(params, opt_state, batch):
+        if accum_steps > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state, stats = adamw_update(grads, params, opt_state,
+                                                opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(stats)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, *, moe_impl="scatter"):
+    def eval_step(params, batch):
+        loss, metrics = loss_fn(params, cfg, batch, moe_impl=moe_impl,
+                                remat=False)
+        return {"loss": loss, **metrics}
+
+    return eval_step

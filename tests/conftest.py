@@ -1,0 +1,10 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests see 1 device
+(the 512-placeholder-device flag belongs to dryrun.py alone)."""
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,68 @@
+"""Flash-decoding over SP shards == plain decode (subprocess mesh)."""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_sp_decode_matches_plain(kv_dtype):
+    script = textwrap.dedent(f"""
+        import os, json
+        os.environ["XLA_FLAGS"] = (
+            "--xla_force_host_platform_device_count=8")
+        import sys; sys.path.insert(0, {os.path.join(ROOT, 'src')!r})
+        import dataclasses, jax, jax.numpy as jnp
+        from repro.configs import ARCHS
+        from repro.dist.sharding import ShardingRules, sharding_context
+        from repro.launch.mesh import make_local_mesh
+        from repro.models.model import decode_step, init_cache, init_model
+
+        cfg = dataclasses.replace(ARCHS["chatglm3-6b"].reduced(),
+                                  vocab=128, kv_cache_dtype={kv_dtype!r})
+        params, _ = init_model(cfg, jax.random.PRNGKey(0))
+        B, T = 2, 32
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, 3), 0, 128)
+
+        def run(sp):
+            cache = init_cache(cfg, B, max_len=T)
+            lgs = []
+            def steps():
+                nonlocal cache
+                out = []
+                c = cache
+                for i in range(3):
+                    lg, c = decode_step(params, cfg, c, toks[:, i:i+1],
+                                        jnp.int32(i))
+                    out.append(lg)
+                return out
+            if sp:
+                mesh = make_local_mesh(data=2, model=4)
+                rules = ShardingRules(batch=("data",), fsdp=(),
+                                      tp=("model",), sp=("model",),
+                                      flash_decode=True)
+                with sharding_context(mesh, rules):
+                    return steps()
+            return steps()
+
+        a = run(False)
+        b = run(True)
+        diff = max(float(jnp.abs(x - y).max()) for x, y in zip(a, b))
+        scale = float(jnp.abs(a[-1]).max())
+        print(json.dumps({{"diff": diff, "scale": scale}}))
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=560,
+                         cwd=ROOT)
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    tol = 2e-3 if kv_dtype == "bf16" else 2e-2
+    assert rec["diff"] < tol * max(rec["scale"], 1.0), rec

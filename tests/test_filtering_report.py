@@ -1,0 +1,85 @@
+"""FDK filtering properties + roofline report rendering."""
+
+import dataclasses
+import json
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Geometry
+from repro.core.filtering import (cosine_weights, filter_projections,
+                                  parker_weights, ramlak_kernel)
+
+
+def test_ramp_kills_dc():
+    """The ramp filter has zero DC response: a constant projection
+    filters to ~0 away from the linear-convolution boundary."""
+    geom = Geometry().scaled(16)
+    const = np.ones((1, geom.n_v, geom.n_u), np.float32)
+    out = np.asarray(filter_projections(const, geom, short_scan=False))
+    noise = np.random.default_rng(0).normal(
+        size=(1, geom.n_v, geom.n_u)).astype(np.float32)
+    outn = np.asarray(filter_projections(noise, geom, short_scan=False))
+    interior = np.abs(out[0, :, 4:-4]).max()
+    assert interior < 0.05 * np.abs(outn).max()
+
+
+def test_ramlak_kernel_structure():
+    h = ramlak_kernel(16, du=1.0)
+    k = np.arange(-8, 8)
+    assert h[k == 0] == 0.25
+    assert (h[(np.abs(k) % 2 == 0) & (k != 0)] == 0).all()
+    assert (h[np.abs(k) % 2 == 1] < 0).all()
+
+
+def test_cosine_weights_bounded_and_centered():
+    geom = Geometry().scaled(16)
+    w = cosine_weights(geom)
+    assert w.max() <= 1.0 + 1e-6
+    iv, iu = np.unravel_index(np.argmax(w), w.shape)
+    assert abs(iu - geom.cu) <= 1 and abs(iv - geom.cv) <= 1
+
+
+def test_parker_weights_full_scan_constant():
+    geom = dataclasses.replace(Geometry().scaled(16), sweep=2 * math.pi)
+    pw = parker_weights(geom)
+    assert np.allclose(pw, 1.0)
+
+
+def test_parker_weights_short_scan_shape():
+    geom = Geometry().scaled(16)         # 200-degree C-arm
+    pw = parker_weights(geom)
+    assert pw.shape == (geom.n_proj, geom.n_u)
+    assert pw.min() >= 0.0
+    # Ramp-up at the start of the sweep: first projection nearly zero.
+    assert pw[0].max() < 0.2
+    # Plateau in the middle of the sweep near the constant-2 level
+    # (the factor-2 compensates the retained FDK 1/2 — filtering.py).
+    assert abs(pw[geom.n_proj // 2].mean() - 2.0) < 0.2
+
+
+def test_report_renders(tmp_path):
+    from repro.analysis.report import load, roofline_table, summary
+    rec = {
+        "arch": "test-arch", "shape": "train_4k", "mesh": "pod",
+        "chips": 256, "status": "ok", "step": "train_step",
+        "model_params": 1, "active_params": 1,
+        "roofline": {"compute_s": 1.0, "memory_s": 2.0,
+                     "collective_s": 0.5, "dominant": "memory",
+                     "bound_s": 2.0},
+        "useful_flops_ratio": 0.5,
+        "memory": {"live_bytes": 8e9},
+        "fits_16gb_hbm": True,
+    }
+    skip = {"arch": "test-arch", "shape": "long_500k", "mesh": "pod",
+            "status": "skipped", "reason": "sub-quadratic required"}
+    for i, r in enumerate((rec, skip)):
+        with open(tmp_path / f"r{i}.json", "w") as f:
+            json.dump(r, f)
+    recs = load(str(tmp_path))
+    assert "1 ok, 1 skipped" in summary(recs)
+    table = roofline_table(recs, "pod")
+    assert "test-arch" in table and "memory" in table
+    assert "50.0%" in table           # MFU-bound = compute/bound
+    assert "skip" in table

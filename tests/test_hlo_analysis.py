@@ -1,0 +1,71 @@
+"""HLO analyzer validation: loop-weighted == unrolled, collectives, trips."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import parse_shape_bytes, roofline_terms
+from repro.analysis.hlo_module import analyze_module
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_scan_flops_match_unrolled():
+    x = jnp.ones((32, 64))
+    ws = jnp.ones((12, 64, 64))
+
+    def model(unroll):
+        def f(x, ws):
+            def body(h, w):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, ws, unroll=unroll)
+            return h.sum()
+        return f
+
+    a1 = analyze_module(_hlo(model(1), x, ws))
+    a12 = analyze_module(_hlo(model(12), x, ws))
+    expected = 2 * 32 * 64 * 64 * 12
+    assert abs(a1["flops"] - a12["flops"]) / a12["flops"] < 0.05
+    assert a1["flops"] >= expected            # + elementwise tanh
+    assert a1["flops"] < expected * 1.2
+
+
+def test_nested_scan_multiplier():
+    def f(x):
+        def outer(h, _):
+            def inner(g, _):
+                return jnp.tanh(g @ g), None
+            g, _ = jax.lax.scan(inner, h, None, length=5)
+            return g, None
+        h, _ = jax.lax.scan(outer, x, None, length=3)
+        return h.sum()
+
+    a = analyze_module(_hlo(f, jnp.ones((16, 16))))
+    expected = 2 * 16 * 16 * 16 * 15          # 3 * 5 nested trips
+    assert a["flops"] > expected * 0.95
+    assert a["flops"] < expected * 1.3
+
+
+def test_census_sees_gather_in_fusion():
+    table = jnp.ones((128, 8))
+    ids = jnp.asarray([1, 5, 9])
+    a = analyze_module(_hlo(lambda t, i: t[i], table, ids))
+    assert a["census"].get("gather", 0) >= 1
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("f32[2,3]") == 24
+    assert parse_shape_bytes("(bf16[4], s8[2,2])") == 12
+    assert parse_shape_bytes("pred[]") == 1
+
+
+def test_roofline_dominance():
+    r = roofline_terms(197e12, 819e7, 50e7)   # 1s compute, 0.01s others
+    assert r["dominant"] == "compute"
+    assert r["bound_s"] == pytest.approx(1.0)
+    r = roofline_terms(0, 0, 50e9)
+    assert r["dominant"] == "collective"
+    assert r["bound_s"] == pytest.approx(1.0)

@@ -1,0 +1,109 @@
+"""Launcher + dry-run machinery unit tests (no 512-device init here)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES
+from repro.configs.registry import cell_supported, cells
+from repro.dist.sharding import (ShardingRules, logical_to_spec,
+                                 valid_spec)
+
+
+class FakeMesh:
+    axis_names = ("pod", "data", "model")
+    shape = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_cells_inventory():
+    all_cells = cells()
+    assert len(all_cells) == 40
+    skips = [c for c in all_cells if not c[2]]
+    assert len(skips) == 8            # long_500k for full-attention archs
+    for cfg, shape, ok, why in skips:
+        assert shape.name == "long_500k"
+        assert cfg.family not in ("ssm", "hybrid")
+        assert "sub-quadratic" in why
+
+
+def test_long500k_runs_for_ssm_hybrid():
+    for name in ("xlstm-125m", "jamba-v0.1-52b"):
+        ok, _ = cell_supported(ARCHS[name], SHAPES["long_500k"])
+        assert ok
+
+
+def test_logical_to_spec_prunes_missing_axes():
+    rules = ShardingRules()
+    spec = logical_to_spec(("batch", None, "tp"), rules, FakeMesh())
+    assert spec == P(("pod", "data"), None, "model")
+
+    class PodlessMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    spec = logical_to_spec(("batch", None, "tp"), rules, PodlessMesh())
+    assert spec == P("data", None, "model")
+
+
+def test_valid_spec_drops_indivisible():
+    spec = valid_spec((768, 8), P("data", "model"), FakeMesh())
+    assert spec == P("data")          # 8 % 16 != 0 -> replicated dim
+    spec = valid_spec((32, 32), P(("pod", "data"), "model"), FakeMesh())
+    assert spec == P(("pod", "data"), "model")
+    spec = valid_spec((33, 32), P(("pod", "data"), "model"), FakeMesh())
+    assert spec == P(None, "model")
+
+
+def test_input_specs_shapes():
+    from repro.launch.dryrun import input_specs
+    cfg = ARCHS["chatglm3-6b"]
+    b = input_specs(cfg, SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    assert b["labels"].shape == (256, 4096)
+    b = input_specs(cfg, SHAPES["decode_32k"])
+    assert b["tokens"].shape == (128, 1)
+    vl = input_specs(ARCHS["qwen2-vl-2b"], SHAPES["train_4k"])
+    assert vl["patches"].shape[1] + vl["tokens"].shape[1] == 4096
+    wh = input_specs(ARCHS["whisper-small"], SHAPES["prefill_32k"])
+    assert wh["frames"].shape == (32, 32768, 80)
+
+
+def test_param_count_sanity():
+    """Configs land near their nameplate sizes."""
+    approx = {
+        "chatglm3-6b": (5e9, 8e9),
+        "internlm2-20b": (17e9, 24e9),
+        "mistral-nemo-12b": (10e9, 14e9),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.7e11),
+        "kimi-k2-1t-a32b": (0.8e12, 1.3e12),
+        "xlstm-125m": (0.8e8, 2.2e8),
+    }
+    for name, (lo, hi) in approx.items():
+        n = ARCHS[name].param_count()
+        assert lo <= n <= hi, f"{name}: {n / 1e9:.1f}B not in range"
+    # Active params well below total for the MoE giants.
+    for name in ("qwen3-moe-235b-a22b", "kimi-k2-1t-a32b"):
+        cfg = ARCHS[name]
+        assert cfg.active_param_count() < 0.25 * cfg.param_count()
+
+
+def test_train_launcher_smoke(tmp_path):
+    """The production launcher end to end on the local mesh."""
+    import subprocess
+    import sys
+    import os
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch",
+         "chatglm3-6b", "--reduced", "--steps", "6", "--seq", "16",
+         "--batch", "2", "--save-every", "3",
+         "--ckpt", str(tmp_path / "ck")],
+        env=env, capture_output=True, text=True, timeout=560, cwd=root)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "finished at step 6" in out.stdout
+    from repro.ckpt.checkpoint import all_steps
+    assert all_steps(str(tmp_path / "ck"))

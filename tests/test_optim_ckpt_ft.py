@@ -1,0 +1,163 @@
+"""Optimizer, checkpointing and fault-tolerance behaviour tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ft.manager import (FaultTolerantLoop, Preempted,
+                              PreemptionSimulator, run_with_restarts)
+from repro.training.optim import (AdamWConfig, adamw_update,
+                                  init_opt_state, opt_state_specs)
+
+
+def _quad_problem():
+    params = {"w": jnp.asarray([2.0, -3.0, 1.0]),
+              "b": jnp.asarray([[0.5, -0.5], [1.0, 2.0]])}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    return params, loss
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_adamw_converges(state_dtype):
+    params, loss = _quad_problem()
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, state_dtype=state_dtype,
+                      warmup_steps=0, total_steps=10_000)
+    opt = init_opt_state(params, cfg)
+    l0 = float(loss(params))
+    for _ in range(200):
+        grads = jax.grad(loss)(params)
+        params, opt, stats = adamw_update(grads, params, opt, cfg)
+    l1 = float(loss(params))
+    assert l1 < 0.05 * l0, f"{state_dtype}: {l0} -> {l1}"
+    assert np.isfinite(float(stats["grad_norm"]))
+
+
+def test_int8_state_memory_shape():
+    params, _ = _quad_problem()
+    cfg = AdamWConfig(state_dtype="int8")
+    opt = init_opt_state(params, cfg)
+    assert opt["m"]["b"]["q"].dtype == jnp.int8
+    assert opt["m"]["b"]["s"].shape == (2, 1)
+    specs = opt_state_specs({"w": ("tp",), "b": ("fsdp", "tp")}, "int8")
+    assert specs["m"]["b"] == {"q": ("fsdp", "tp"), "s": ("fsdp", "null")}
+
+
+def test_grad_clip_applied():
+    params, _ = _quad_problem()
+    w_before = np.asarray(params["w"]).copy()   # params are donated
+    cfg = AdamWConfig(lr=1e-3, clip_norm=1e-6, weight_decay=0.0)
+    opt = init_opt_state(params, cfg)
+    huge = jax.tree.map(lambda p: 1e9 * jnp.ones_like(p), params)
+    new_params, _, stats = adamw_update(huge, params, opt, cfg)
+    delta = float(np.max(np.abs(np.asarray(new_params["w"]) - w_before)))
+    assert delta < 1e-3
+
+
+# ----------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "nested": {"b": jnp.ones((4,), jnp.int8)},
+            "step": jnp.int32(7)}
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, 3, tree)
+    save_checkpoint(d, 7, jax.tree.map(lambda a: a * 0, tree))
+    like = jax.tree.map(lambda a: jnp.zeros_like(a), tree)
+    out, step = load_checkpoint(d, like)
+    assert step == 7
+    assert float(jnp.sum(jnp.abs(out["a"].astype(jnp.float32)))) == 0.0
+    out3, _ = load_checkpoint(d, like, step=3)
+    np.testing.assert_array_equal(np.asarray(out3["a"], np.float32),
+                                  np.asarray(tree["a"], np.float32))
+    # No .tmp dirs linger.
+    assert not [n for n in os.listdir(d) if n.endswith(".tmp")]
+
+
+def test_checkpoint_retention(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"x": jnp.zeros((2,))}
+    for s in range(6):
+        save_checkpoint(d, s, tree, keep=2)
+    from repro.ckpt.checkpoint import all_steps
+    assert all_steps(d) == [4, 5]
+
+
+def test_async_manager(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "ck"), keep=2)
+    tree = {"x": jnp.arange(4.0)}
+    mgr.save_async(1, tree)
+    mgr.save_async(2, jax.tree.map(lambda a: a + 1, tree))
+    mgr.wait()
+    assert mgr.latest_step() == 2
+    out, step = mgr.restore({"x": jnp.zeros(4)})
+    np.testing.assert_allclose(np.asarray(out["x"]),
+                               np.arange(4.0) + 1)
+
+
+# ----------------------------------------------------------------------
+
+def test_preemption_resume_bit_exact(tmp_path):
+    """Training interrupted by preemption resumes to the same result."""
+    cfg = AdamWConfig(lr=0.05, weight_decay=0.0, warmup_steps=0)
+
+    def init_fn():
+        params = {"w": jnp.asarray([2.0, -3.0, 1.0])}
+        return {"params": params, "opt": init_opt_state(params, cfg)}
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    def step_fn(state, step):
+        grads = jax.grad(loss)(state["params"])
+        p, o, stats = adamw_update(grads, state["params"], state["opt"],
+                                   cfg)
+        return {"params": p, "opt": o}, stats
+
+    n_steps = 30
+    # Uninterrupted reference.
+    ref = init_fn()
+    for s in range(n_steps):
+        ref, _ = step_fn(ref, s)
+
+    sim = PreemptionSimulator({11, 23})
+    fired = set()
+
+    def health(step):
+        if step in sim.at_steps and step not in fired:
+            fired.add(step)
+            return True
+        return False
+
+    def make_loop():
+        return FaultTolerantLoop(str(tmp_path / "ck"), save_every=5,
+                                 health=health)
+
+    state, step, restarts = run_with_restarts(
+        make_loop, init_fn, step_fn, n_steps)
+    assert restarts == 2
+    assert step == n_steps
+    np.testing.assert_allclose(np.asarray(state["params"]["w"]),
+                               np.asarray(ref["params"]["w"]),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_straggler_detection():
+    import time
+    loop = FaultTolerantLoop("/tmp/unused_ck_dir", save_every=0)
+
+    def step_fn(state, step):
+        if step == 12:
+            time.sleep(0.25)
+        else:
+            time.sleep(0.005)
+        return state, {}
+
+    loop.run({}, 0, 20, step_fn)
+    assert 12 in loop.stragglers
