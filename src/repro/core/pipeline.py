@@ -24,7 +24,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
+
+from repro.dist.sharding import (ShardingRules, logical_to_spec,
+                                 shard_constraint, sharding_context)
 
 from .backproject import GeomStatic, _backproject_one_jit
 from .geometry import Geometry
@@ -68,8 +71,12 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     if gs.L % z_shards:
         raise ValueError(f"L={gs.L} not divisible by {z_shards} z-shards")
 
-    proj_spec = P(proj_axes)
-    vol_spec = P(volume_axis)
+    # One sharding vocabulary with the LM path (repro.dist.sharding):
+    # the CT decomposition is just two more logical axes — ``vol``
+    # (z-planes, the paper's OpenMP plane split) and ``proj``.
+    rules = ShardingRules(vol=(volume_axis,), proj=tuple(proj_axes))
+    proj_spec = logical_to_spec(("proj",), rules, mesh)
+    vol_spec = logical_to_spec(("vol",), rules, mesh)
 
     @functools.partial(
         jax.shard_map, mesh=mesh,
@@ -92,13 +99,18 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
             partial = jax.lax.psum(partial, ax)
         return partial
 
-    volume = jnp.zeros((gs.L, gs.L, gs.L), dtype=jnp.float32)
-    volume = jax.device_put(volume, NamedSharding(mesh, vol_spec))
-    projections = jax.device_put(jnp.asarray(projections),
-                                 NamedSharding(mesh, proj_spec))
-    matrices = jax.device_put(jnp.asarray(matrices, jnp.float32),
-                              NamedSharding(mesh, proj_spec))
-    return run(projections, matrices, volume)
+    with sharding_context(mesh, rules):
+        # shard_constraint is the placement mechanism here — the same
+        # annotation idiom (and specs) the LM layers use, not a parallel
+        # device_put path.
+        volume = shard_constraint(
+            jnp.zeros((gs.L, gs.L, gs.L), dtype=jnp.float32),
+            ("vol", None, None))
+        projections = shard_constraint(jnp.asarray(projections),
+                                       ("proj", None, None))
+        matrices = shard_constraint(jnp.asarray(matrices, jnp.float32),
+                                    ("proj", None, None))
+        return run(projections, matrices, volume)
 
 
 def _reconstruct_slab(local_projs, local_mats, gs, strategy, opts_tuple,

@@ -1,0 +1,97 @@
+"""Hand-scheduled gradient all-reduce variants (shard_map interior).
+
+Both functions run *inside* a manual-sharding region (``jax.shard_map``)
+and reduce a gradient pytree over one named mesh axis.  They exist
+because the default per-leaf ``psum`` has two production problems the
+paper's scaling sections run into at mesh scale:
+
+* **latency**: thousands of tiny all-reduces (one per parameter leaf)
+  are latency-bound; :func:`bucketed_psum` concatenates consecutive
+  leaves into ``>= min_bucket_bytes`` flat buckets first, so the
+  interconnect sees a few large transfers (exact — pure reordering).
+* **bandwidth**: fp32 gradients move 4 bytes/element;
+  :func:`compress_psum` moves int8 codes plus one scalar scale and
+  keeps the quantisation residual on-device as *error feedback*, so the
+  running average of compressed reductions converges to the true mean
+  (tests/test_distributed.py::test_compress_psum_error_feedback).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bucketed_psum", "compress_psum"]
+
+
+def bucketed_psum(tree, axis: str, min_bucket_bytes: int = 1 << 22):
+    """Exact all-reduce-sum of ``tree`` over ``axis``, few big transfers.
+
+    Consecutive same-dtype leaves are flattened and concatenated until a
+    bucket reaches ``min_bucket_bytes``, each bucket is ``psum``-ed as
+    one vector, and the leaves are sliced back out.  Bit-exact per leaf:
+    concatenation commutes with the elementwise sum.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    buckets: list[list[int]] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    cur_dtype = None
+    for i, leaf in enumerate(leaves):
+        if cur and (leaf.dtype != cur_dtype
+                    or cur_bytes >= min_bucket_bytes):
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_dtype = leaf.dtype
+        cur_bytes += leaf.size * leaf.dtype.itemsize
+    if cur:
+        buckets.append(cur)
+
+    out = [None] * len(leaves)
+    for bucket in buckets:
+        flat = jnp.concatenate([leaves[i].reshape(-1) for i in bucket])
+        summed = jax.lax.psum(flat, axis)
+        offset = 0
+        for i in bucket:
+            n = leaves[i].size
+            out[i] = summed[offset:offset + n].reshape(leaves[i].shape)
+            offset += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def compress_psum(tree, axis: str, error_tree):
+    """int8-compressed all-reduce-*mean* with error feedback.
+
+    Per leaf: add the carried residual, quantise to int8 on a shared
+    symmetric grid (scale = global absmax via ``pmax``), all-gather the
+    codes (the only non-scalar transfer — 1 byte/element), sum them
+    locally in int32, and return the dequantised mean.  The new residual
+    ``(x + e) - dequant(q)`` is returned for the caller to carry into
+    the next step — the EF trick that turns a biased one-shot compressor
+    into an asymptotically exact reduction (the running average of
+    outputs converges to the true mean at 1/t).
+
+    Returns ``(mean_tree, new_error_tree)``; wire bytes per element are
+    1 (codes) instead of 4, plus one fp32 scale per leaf.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e.astype(jnp.float32)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+        scale = jnp.maximum(amax, 1e-30) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127)
+        dequant = q * scale
+        new_e = x - dequant
+        # int8 moves on the wire (an all-gather of codes); the sum runs
+        # locally in int32.  A psum would widen the codes to 4 bytes and
+        # erase the whole point of quantising.
+        codes = jax.lax.all_gather(q.astype(jnp.int8), axis)
+        total = codes.astype(jnp.int32).sum(axis=0)
+        mean = total.astype(jnp.float32) * scale / codes.shape[0]
+        return mean.astype(g.dtype), new_e.astype(e.dtype)
+
+    g_leaves, treedef = jax.tree.flatten(tree)
+    e_leaves = jax.tree.leaves(error_tree)
+    pairs = [one(g, e) for g, e in zip(g_leaves, e_leaves)]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))

@@ -1,0 +1,167 @@
+"""Logical-axis sharding: names in model code, mesh axes at the edge.
+
+Every tensor annotation in this repo is written against *logical* axis
+names.  A :class:`ShardingRules` instance maps each logical name to a
+tuple of mesh axis names; :func:`logical_to_spec` resolves an annotation
+against a concrete mesh, silently pruning mesh axes the mesh does not
+have — the same rules lower onto a 2-pod 512-chip production mesh, a
+single 16x16 pod, or a 2-device CPU test mesh without touching model
+code (DESIGN.md §5).
+
+Two special logical names are always replicated: ``None`` and ``"null"``
+(the latter used in spec *trees*, where ``None`` would read as an empty
+pytree).
+
+:func:`valid_spec` is the divisibility guard: any tensor dimension that
+does not divide by the total size of its assigned mesh axes falls back
+to replication for that dimension (GSPMD would otherwise pad; for the
+dry-run memory accounting we want exact shards or none).
+
+:func:`sharding_context` + :func:`shard_constraint` give model code a
+zero-cost annotation idiom: ``shard_constraint(x, ("batch", None,
+"tp"))`` is the identity outside a context and a
+``jax.lax.with_sharding_constraint`` inside one, so single-device tests
+run the exact same code path as the production launcher.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ShardingRules",
+    "logical_to_spec",
+    "valid_spec",
+    "sharding_context",
+    "shard_constraint",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axes mapping (+ schedule feature flags).
+
+    LM axes: ``batch`` (data parallel), ``fsdp`` (ZeRO-3 parameter
+    sharding), ``tp`` (tensor parallel), ``ep`` (expert parallel), ``sp``
+    (sequence-parallel KV cache), ``sp_act`` (Megatron-SP residual
+    stream).  CT axes: ``vol`` (volume z-planes — the paper's OpenMP
+    plane decomposition), ``proj`` (projection subsets).
+
+    ``flash_decode`` is a schedule flag, not an axis: it opts decode into
+    the manual flash-decoding path over the ``sp`` shards
+    (:func:`repro.models.attention._decode_attend_sp`).
+    """
+
+    batch: tuple[str, ...] = ("pod", "data")
+    fsdp: tuple[str, ...] = ("data",)
+    tp: tuple[str, ...] = ("model",)
+    ep: tuple[str, ...] = ("model",)
+    sp: tuple[str, ...] = ()
+    sp_act: tuple[str, ...] = ()
+    vol: tuple[str, ...] = ("data",)
+    proj: tuple[str, ...] = ("pod", "model")
+    flash_decode: bool = False
+
+
+def logical_to_spec(axes, rules: ShardingRules, mesh) -> P:
+    """Resolve logical axis names to a PartitionSpec on ``mesh``.
+
+    Mesh axes named by a rule but absent from ``mesh.axis_names`` are
+    pruned (a podless mesh collapses ``("pod", "data")`` to ``"data"``);
+    a rule whose axes are all pruned — or mapped to ``()`` — replicates.
+    """
+    names = set(mesh.axis_names)
+    entries = []
+    for ax in axes:
+        if ax is None or ax == "null":
+            entries.append(None)
+            continue
+        mapped = getattr(rules, ax)
+        mapped = (mapped,) if isinstance(mapped, str) else tuple(mapped)
+        present = tuple(a for a in mapped if a in names)
+        if not present:
+            entries.append(None)
+        elif len(present) == 1:
+            entries.append(present[0])
+        else:
+            entries.append(present)
+    return P(*entries)
+
+
+def valid_spec(shape, spec: P, mesh) -> P:
+    """Drop spec entries whose dimension does not divide the shard count.
+
+    Each dimension sharded over mesh axes with total size ``n`` must be a
+    multiple of ``n``; otherwise that dimension replicates.  Trailing
+    replicated entries are trimmed so fully-replicated tails compare
+    equal to shorter specs.
+    """
+    sizes = dict(mesh.shape)
+    entries = []
+    for i, dim in enumerate(shape):
+        entry = spec[i] if i < len(spec) else None
+        if entry is None:
+            entries.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        shards = 1
+        for a in axes:
+            shards *= sizes[a]
+        entries.append(entry if dim % shards == 0 else None)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+# ----------------------------------------------------------------------
+# Ambient sharding context
+# ----------------------------------------------------------------------
+
+# (mesh, rules) of the innermost active sharding_context, or None.  A
+# ContextVar (not a bare module global) so nested/threaded launchers each
+# see their own context; model code reads it via ``_CTX.get()``.
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_context", default=None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh, rules: ShardingRules):
+    """Make ``(mesh, rules)`` ambient for :func:`shard_constraint`."""
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+# Valid logical names for annotations (flash_decode is a flag, not an
+# axis).  Checked even outside a context so a typo'd annotation fails in
+# single-device unit tests, not at the first production launch.
+_LOGICAL_AXES = frozenset(
+    f.name for f in dataclasses.fields(ShardingRules)) - {"flash_decode"}
+
+
+def shard_constraint(x, logical_axes):
+    """Pin ``x`` to its logical sharding — no-op outside a context.
+
+    Inside a :func:`sharding_context` this lowers to
+    ``jax.lax.with_sharding_constraint`` with the resolved (and
+    divisibility-guarded) spec; outside one it returns ``x`` unchanged,
+    which is what keeps single-device unit tests free of mesh plumbing.
+    """
+    for ax in logical_axes:
+        if ax is not None and ax != "null" and ax not in _LOGICAL_AXES:
+            raise ValueError(f"unknown logical axis {ax!r}; want one of "
+                             f"{sorted(_LOGICAL_AXES)}")
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = valid_spec(x.shape, logical_to_spec(logical_axes, rules, mesh),
+                      mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

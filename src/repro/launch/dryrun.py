@@ -287,7 +287,9 @@ def run_cell(cfg, shape, mesh_name: str, *, out_dir=None, verbose=True,
             "output_bytes": int(mem.output_size_in_bytes),
             "temp_bytes": int(mem.temp_size_in_bytes),
             "alias_bytes": int(mem.alias_size_in_bytes),
-            "peak_bytes": int(mem.peak_memory_in_bytes),
+            # Older jaxlib CompiledMemoryStats has no peak field; the
+            # live-bytes estimate below never needed it.
+            "peak_bytes": int(getattr(mem, "peak_memory_in_bytes", 0)),
         }
         live = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
                 - mem.alias_size_in_bytes)
@@ -303,6 +305,8 @@ def run_cell(cfg, shape, mesh_name: str, *, out_dir=None, verbose=True,
         bytes_acc = mod["bytes"]
         coll = mod["collectives"]
         xla_cost = compiled.cost_analysis() or {}
+        if isinstance(xla_cost, (list, tuple)):   # pre-0.5: per-computation
+            xla_cost = xla_cost[0] if xla_cost else {}
         rec["cost"] = {
             "flops_per_device": flops,
             "bytes_accessed_per_device": bytes_acc,

@@ -8,7 +8,7 @@ oracle across geometry sweeps, plus end-to-end reconstruction agreement.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import Geometry, filter_projections
 from repro.core.backproject import (GeomStatic, STRATEGIES, _pad_image,

@@ -1,7 +1,7 @@
-"""Clipping mask + strip plan vs brute force (hypothesis sweeps)."""
+"""Clipping mask + strip plan vs brute force (property sweeps)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.clipping import (line_clip_conservative, line_clip_exact,
                                  plan_strips)

@@ -2,7 +2,7 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.geometry import (Geometry, detector_basis,
                                  project_voxels, projection_matrix,
