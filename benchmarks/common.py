@@ -1,32 +1,62 @@
-"""Shared benchmark utilities: timing, CSV emission, standard problems."""
+"""Shared benchmark utilities: timing, CSV+JSON emission, standard problems.
+
+``time_fn`` is the single timing implementation shared with the autotuner
+(``repro.tune.timing``) so tuned decisions and benchmark rows are
+comparable numbers.  Every ``emit`` row is also collected into
+:data:`RESULTS` (with ``key=value`` pairs in the derived column parsed
+out) so ``benchmarks.run --json`` can persist a machine-readable
+trajectory entry; :func:`record_extra` attaches structured extras such as
+the autotuner's chosen config.
+"""
 
 from __future__ import annotations
 
-import time
+import os
 
-import jax
 import numpy as np
 
 from repro.core import Geometry, filter_projections
 from repro.core.phantom import make_dataset
+from repro.tune.timing import time_fn  # noqa: F401  (re-export)
+
+# Tiny mode shrinks every standard problem to CI-sized shapes via
+# ``bench_size`` (``benchmarks.run --tiny`` or REPRO_BENCH_TINY=1);
+# moe_dispatch is laptop-sized by construction and takes no size knob.
+TINY = os.environ.get("REPRO_BENCH_TINY", "0") not in ("", "0")
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
-    """Median wall time (seconds) of jitted ``fn``; blocks on results."""
-    for _ in range(warmup):
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args, **kw)
-        jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+def bench_size(normal, tiny):
+    """Pick the CI-tiny or the paper-representative problem size."""
+    return tiny if TINY else normal
+
+
+RESULTS: list[dict] = []
+EXTRAS: dict = {}
+
+
+def _parse_derived(derived: str) -> dict:
+    fields = {}
+    for tok in derived.split():
+        if "=" not in tok:
+            continue
+        k, _, v = tok.partition("=")
+        try:
+            fields[k] = float(v)
+        except ValueError:
+            fields[k] = v
+    return fields
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):
+    RESULTS.append({"name": name, "us_per_call": us_per_call,
+                    "derived": derived,
+                    "fields": _parse_derived(derived)})
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def record_extra(key: str, value):
+    """Attach a structured (JSON-serialisable) extra to this run."""
+    EXTRAS[key] = value
 
 
 _CACHE = {}

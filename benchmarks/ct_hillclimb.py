@@ -25,7 +25,7 @@ from repro.analysis.hlo_module import analyze_module
 from repro.core.backproject import backproject_one
 from repro.core.clipping import line_clip_exact
 
-from .common import ct_problem, emit
+from .common import bench_size, ct_problem, emit
 
 FULL = 512 ** 3 * 496
 
@@ -40,7 +40,8 @@ VARIANTS = [
 ]
 
 
-def run(L: int = 64):
+def run(L: int | None = None):
+    L = bench_size(64, 16) if L is None else L
     geom, filt, mats, _ = ct_problem(L)
     vol0 = jnp.zeros((L,) * 3, jnp.float32)
     # Mid-sweep projection: the first one is Parker-weighted to ~zero.

@@ -18,12 +18,13 @@ from repro.analysis.hlo import HBM_BW, PEAK_FLOPS
 from repro.analysis.hlo_module import analyze_module
 from repro.core.backproject import STRATEGIES, backproject_one
 
-from .common import ct_problem, emit, STRATEGY_OPTS
+from .common import bench_size, ct_problem, emit, STRATEGY_OPTS
 
 FULL_VOXELS = 512 ** 3 * 496       # medically relevant problem
 
 
-def run(L: int = 64):
+def run(L: int | None = None):
+    L = bench_size(64, 16) if L is None else L
     geom, filt, mats, _ = ct_problem(L)
     vol0 = jnp.zeros((L,) * 3, jnp.float32)
     image = jnp.asarray(filt[0])

@@ -4,6 +4,12 @@ GUP/s (billions of voxel updates per second) per gather strategy for one
 projection on one device — the paper's single-core SIMD comparison.
 (The SMT column of Fig. 1 has no single-device analogue here; latency
 hiding is the Pallas grid pipeline, measured structurally in fig3.)
+
+After the per-strategy rows, the autotuner sweeps its candidate space on
+this geometry, persists the winner (``.repro_tune/``), and the
+``fig1/auto`` row times ``strategy="auto"`` resolving through that cache
+— the chosen config lands in the ``--json`` trajectory via
+``record_extra``.
 """
 
 from __future__ import annotations
@@ -11,12 +17,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.backproject import STRATEGIES, backproject_one
+from repro.tune import autotune
 
-from .common import ct_problem, emit, time_fn, STRATEGY_OPTS
+from .common import (STRATEGY_OPTS, bench_size, ct_problem, emit,
+                     record_extra, time_fn)
 
 
-def run(L: int = 96):
-    geom, filt, mats, _ = ct_problem(L, n_proj=4)
+def run(L: int | None = None):
+    L = bench_size(96, 16) if L is None else L
+    geom, filt, mats, _ = ct_problem(L, n_proj=bench_size(4, 2))
     vol0 = jnp.zeros((L,) * 3, jnp.float32)
     image = jnp.asarray(filt[0])
     A = jnp.asarray(mats[0])
@@ -26,6 +35,13 @@ def run(L: int = 96):
                     **STRATEGY_OPTS[strat])
         emit(f"fig1/{strat}", t * 1e6,
              f"gups={L ** 3 / t / 1e9:.4f} L={L}")
+
+    cfg = autotune(geom, image=image, A=A, warmup=1, iters=3)
+    t = time_fn(backproject_one, vol0, image, A, geom,
+                strategy=cfg.strategy, warmup=1, iters=3, **cfg.opts)
+    emit("fig1/auto", t * 1e6,
+         f"gups={L ** 3 / t / 1e9:.4f} L={L} chosen={cfg.strategy}")
+    record_extra("tuned_config", cfg.as_dict())
 
 
 if __name__ == "__main__":

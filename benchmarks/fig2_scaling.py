@@ -15,7 +15,7 @@ import subprocess
 import sys
 import textwrap
 
-from .common import emit
+from .common import bench_size, emit
 
 _CHILD = textwrap.dedent("""
     import os, sys, json, time
@@ -45,7 +45,9 @@ _CHILD = textwrap.dedent("""
 """)
 
 
-def run(L: int = 48, n_proj: int = 8):
+def run(L: int | None = None, n_proj: int | None = None):
+    L = bench_size(48, 16) if L is None else L
+    n_proj = bench_size(8, 4) if n_proj is None else n_proj
     results = {}
     for ndev, data, model in [(1, 1, 1), (2, 2, 1), (4, 2, 2),
                               (8, 4, 2)]:

@@ -21,10 +21,11 @@ from repro.kernels.backproject_ops import pallas_backproject_one
 from repro.kernels.backproject_ref import backproject_volume_ref
 from repro.core.backproject import GeomStatic
 
-from .common import ct_problem, emit, time_fn, STRATEGY_OPTS
+from .common import bench_size, ct_problem, emit, time_fn, STRATEGY_OPTS
 
 
-def run(L: int = 64):
+def run(L: int | None = None):
+    L = bench_size(64, 16) if L is None else L
     geom, filt, mats, _ = ct_problem(L)
     vol0 = jnp.zeros((L,) * 3, jnp.float32)
     image = jnp.asarray(filt[0])

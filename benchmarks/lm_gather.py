@@ -16,10 +16,14 @@ from repro.analysis.hlo_module import analyze_module
 from repro.core.gather_ops import onehot_gather, take_gather
 from repro.kernels.gather_kernel_ops import pallas_onehot_gather
 
-from .common import emit, time_fn
+from .common import bench_size, emit, time_fn
 
 
-def run(V: int = 8192, D: int = 256, N: int = 2048):
+def run(V: int | None = None, D: int | None = None,
+        N: int | None = None):
+    V = bench_size(8192, 1024) if V is None else V
+    D = bench_size(256, 64) if D is None else D
+    N = bench_size(2048, 256) if N is None else N
     key = jax.random.PRNGKey(0)
     table = jax.random.normal(key, (V, D), jnp.float32)
     ids = jax.random.randint(key, (N,), 0, V)

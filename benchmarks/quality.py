@@ -14,10 +14,12 @@ from repro.core import quality_report, reconstruct
 from repro.core.backproject import STRATEGIES
 from repro.kernels.backproject_ops import pallas_backproject_one
 
-from .common import ct_problem, emit, STRATEGY_OPTS
+from .common import bench_size, ct_problem, emit, STRATEGY_OPTS
 
 
-def run(L: int = 48, n_proj: int = 64):
+def run(L: int | None = None, n_proj: int | None = None):
+    L = bench_size(48, 16) if L is None else L
+    n_proj = bench_size(64, 8) if n_proj is None else n_proj
     geom, filt, mats, ref = ct_problem(L, n_proj=n_proj)
     base_psnr = None
     for strat in STRATEGIES:

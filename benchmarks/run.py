@@ -16,15 +16,27 @@ quality                     RabbitCT accuracy score (PSNR)
 lm_gather                   the technique on the assigned LM archs
 ==========================  ==============================================
 
-``python -m benchmarks.run [--only name]``
+``python -m benchmarks.run [--only name] [--json PATH] [--tiny]``
+
+``--json PATH`` appends one machine-readable run entry (device meta,
+every emitted row with its parsed ``key=value`` fields, and structured
+extras such as the autotuner's chosen config) to ``PATH`` — the perf
+trajectory file (``BENCH_ct.json``) every future PR extends.  ``--tiny``
+shrinks the standard problems to CI-sized shapes.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 import traceback
+from pathlib import Path
 
+import jax
+
+from . import common
 from . import (ct_hillclimb, cycle_model, fig1_single_device,
                fig2_scaling, fig3_codegen, lm_gather, moe_dispatch,
                quality, table2_op_census, table3_efficiency,
@@ -45,15 +57,66 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def _write_json(path: str, ran: list[str], n_fail: int) -> None:
+    """Append this run as one trajectory entry to ``path``."""
+    from repro.tune import device_identity
+
+    backend, device_kind = device_identity()
+    entry = {
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "meta": {
+            "backend": backend,
+            "device_kind": device_kind,
+            "jax_version": jax.__version__,
+            "tiny": common.TINY,
+            "modules": ran,
+            "failures": n_fail,
+        },
+        "rows": common.RESULTS,
+        "extras": common.EXTRAS,
+    }
+    p = Path(path)
+    doc = {"runs": []}
+    if p.is_file():
+        try:
+            old = json.loads(p.read_text())
+            if isinstance(old, dict) and isinstance(old.get("runs"), list):
+                doc = old
+        except json.JSONDecodeError:
+            pass                    # unreadable trajectory: start fresh
+    doc["runs"].append(entry)
+    p.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path} ({len(doc['runs'])} run(s))", flush=True)
+
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--only", default=None,
+                    help="run a single module by name")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append a machine-readable run entry to PATH")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized problem shapes")
+    args = ap.parse_args(argv)
+    names = [n for n, _ in MODULES]
+    if args.only is not None and args.only not in names:
+        print(f"unknown module {args.only!r}; valid modules: "
+              f"{', '.join(names)}", file=sys.stderr)
+        raise SystemExit(2)
+    if args.tiny:
+        common.TINY = True
+    # Fresh collection state per invocation: a second in-process main()
+    # (tests, notebooks) must not replay the previous run's rows/extras
+    # into its --json trajectory entry.
+    common.RESULTS.clear()
+    common.EXTRAS.clear()
     print("name,us_per_call,derived")
     n_fail = 0
+    ran = []
     for name, mod in MODULES:
         if args.only and args.only != name:
             continue
+        ran.append(name)
         t0 = time.time()
         try:
             mod.run()
@@ -62,6 +125,8 @@ def main() -> None:
             n_fail += 1
             print(f"# {name} FAILED:")
             traceback.print_exc()
+    if args.json:
+        _write_json(args.json, ran, n_fail)
     if n_fail:
         raise SystemExit(1)
 

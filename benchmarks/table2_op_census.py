@@ -22,7 +22,7 @@ from repro.analysis.hlo_module import analyze_module
 from repro.core.backproject import (GeomStatic, STRATEGIES, _pad_image,
                                     _sample, accumulate, plane_coords)
 
-from .common import ct_problem, emit, STRATEGY_OPTS
+from .common import bench_size, ct_problem, emit, STRATEGY_OPTS
 
 
 def _census(fn, *args):
@@ -30,7 +30,8 @@ def _census(fn, *args):
     return analyze_module(txt)
 
 
-def run(L: int = 64):
+def run(L: int | None = None):
+    L = bench_size(64, 16) if L is None else L
     geom, filt, mats, _ = ct_problem(L)
     gs = GeomStatic.of(geom)
     image = jnp.asarray(filt[0])

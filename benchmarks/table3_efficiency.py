@@ -22,10 +22,11 @@ from repro.analysis.hlo_module import analyze_module
 from repro.core.backproject import STRATEGIES, backproject_one
 from repro.core.clipping import line_clip_conservative, line_clip_exact
 
-from .common import ct_problem, emit, time_fn, STRATEGY_OPTS
+from .common import bench_size, ct_problem, emit, time_fn, STRATEGY_OPTS
 
 
-def run(L: int = 64):
+def run(L: int | None = None):
+    L = bench_size(64, 16) if L is None else L
     geom, filt, mats, _ = ct_problem(L)
     vol0 = jnp.zeros((L,) * 3, jnp.float32)
     image = jnp.asarray(filt[0])

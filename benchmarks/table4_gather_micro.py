@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.gather_ops import onehot_gather, take_gather
 
-from .common import emit, time_fn
+from .common import bench_size, emit, time_fn
 
 ROW = 128      # lane-tile width
 
@@ -52,7 +52,9 @@ def _strip_gather(table, ids, per_row):
                       blocks).reshape(-1)
 
 
-def run(n: int = 4096, rows: int = 512):
+def run(n: int | None = None, rows: int | None = None):
+    n = bench_size(4096, 512) if n is None else n
+    rows = bench_size(512, 64) if rows is None else rows
     table1d = jnp.arange(rows * ROW, dtype=jnp.float32)
     table2d = table1d.reshape(rows * ROW, 1)
 

@@ -41,6 +41,7 @@ metric.)
 from __future__ import annotations
 
 import functools
+import hashlib
 from typing import NamedTuple
 
 import jax
@@ -61,6 +62,7 @@ __all__ = [
     "accumulate",
     "backproject_plane",
     "backproject_one",
+    "validate_strip_opts",
     "reconstruct",
 ]
 
@@ -291,7 +293,7 @@ def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
 
 
 def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
-                  gband: int = 4, gwidth: int = 64,
+                  gband: int = 8, gwidth: int = 64,
                   groups_per_block: int = 512):
     """Two-level micro-window sampling (beyond-paper; Pallas kernel scheme).
 
@@ -300,7 +302,12 @@ def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
     VPU-width one-hot compares.  Per-voxel cost drops from
     ``2*band*width`` flops to ``~2*gband*gwidth`` — the napkin math behind
     hillclimb iteration CT-1 in EXPERIMENTS.md.  Semantics identical to
-    every other strategy.
+    every other strategy *provided* the window covers the group's tap
+    footprint — taps past the window edge select all-zero one-hot rows
+    and vanish silently, which is why :func:`reconstruct` runs the
+    planner-backed :func:`validate_strip_opts` check.  (``gband`` used to
+    default to 4, which silently dropped taps for standard RabbitCT-scaled
+    geometries at L>=48; 8 covers every geometry in the repo's sweeps.)
     """
     L = gs.L
     group = _divisor_at_most(L, group)
@@ -414,6 +421,77 @@ def backproject_one(volume, image, A, geom: Geometry | GeomStatic,
                                 tuple(sorted(opts.items())))
 
 
+# Memo of (geometry, strategy, window, matrices) combinations already
+# proven safe — validation is host-side numpy and should be paid once per
+# distinct problem, not once per reconstruct() call.
+_VALIDATED_STRIPS: set = set()
+
+
+def validate_strip_opts(geom: Geometry, matrices, strategy: str,
+                        opts: dict) -> None:
+    """Planner-backed check that strip/strip2 windows cover every footprint.
+
+    The jnp ``strip``/``strip2`` strategies select taps from a statically
+    sized window with one-hot compares; a tap outside the window selects
+    an all-zero row and is *silently dropped*.  The Pallas path guards
+    this with ``validate_strip_config``; this is the same guard for the
+    jnp paths, reusing the host planner (:func:`repro.core.clipping
+    .plan_strips`, exact by the monotone-beam property).  Raises
+    ``ValueError`` with the required window sizes when the static config
+    is too small.  No-op for strategies without windows.
+    """
+    if strategy == "strip":
+        chunk = _divisor_at_most(geom.L, int(opts.get("chunk", 128)))
+        band = min(int(opts.get("band", 16)), geom.n_v + 2)
+        width = min(int(opts.get("width", 512)), geom.n_u + 2)
+        what = f"strip (chunk={chunk}, band={band}, width={width})"
+    elif strategy == "strip2":
+        chunk = _divisor_at_most(geom.L, int(opts.get("group", 8)))
+        band = min(int(opts.get("gband", 8)), geom.n_v + 2)
+        width = min(int(opts.get("gwidth", 64)), geom.n_u + 2)
+        what = f"strip2 (group={chunk}, gband={band}, gwidth={width})"
+    else:
+        return
+    if isinstance(matrices, jax.core.Tracer):
+        return                      # in-trace call: host check impossible
+    mats = np.asarray(matrices, np.float64).reshape(-1, 3, 4)
+    key = (GeomStatic.of(geom), strategy, chunk, band, width,
+           hashlib.sha1(mats.tobytes()).hexdigest())
+    if key in _VALIDATED_STRIPS:
+        return
+    from .clipping import plan_strips
+
+    need_band = need_width = 0
+    for A in mats:
+        plan = plan_strips(geom, A, chunk=chunk)
+        need_band = max(need_band, plan.required_band)
+        need_width = max(need_width, plan.required_width)
+    # A full-detector window can never lose a tap: its origin clamps to 0
+    # and it spans the whole padded image, so the planner's margin must
+    # not push the requirement past the satisfiable maximum.
+    need_band = min(need_band, geom.n_v + 2)
+    need_width = min(need_width, geom.n_u + 2)
+    if band < need_band or width < need_width:
+        raise ValueError(
+            f"{what} does not cover the chunk tap footprint for this "
+            f"geometry; need at least (band={need_band}, "
+            f"width={need_width}) — undersized windows drop taps "
+            f"silently")
+    if len(_VALIDATED_STRIPS) >= 4096:   # bound a long-lived process
+        _VALIDATED_STRIPS.clear()
+    _VALIDATED_STRIPS.add(key)
+
+
+@functools.partial(jax.jit, static_argnames=("gs", "strategy", "opts_tuple"))
+def _reconstruct_jit(projections, matrices, volume, gs, strategy,
+                     opts_tuple):
+    def body(k, vol):
+        return _backproject_one_jit(vol, projections[k], matrices[k],
+                                    gs, strategy, opts_tuple)
+
+    return jax.lax.fori_loop(0, projections.shape[0], body, volume)
+
+
 def reconstruct(projections, matrices, geom: Geometry,
                 strategy: str = "strip2", volume=None, **opts):
     """Full reconstruction: stream every projection into the volume.
@@ -423,19 +501,27 @@ def reconstruct(projections, matrices, geom: Geometry,
     projection loop is a ``fori_loop`` so the compiled graph is one HLO
     regardless of ``n_proj`` (the distribution layer shards this loop —
     see :mod:`repro.core.pipeline`).
+
+    ``strategy="auto"`` consults the autotuner cache
+    (:mod:`repro.tune`) for the best strategy measured on this
+    geometry/backend/device triple, falling back to ``"strip2"`` with the
+    caller's options when untuned.  For ``strip``/``strip2`` the static
+    windows are validated against the host planner before any device work
+    (see :func:`validate_strip_opts`).
+
+    The jitted body is a module-level function with ``(gs, strategy,
+    opts_tuple)`` static, so repeated calls with one problem hit one
+    compile-cache entry (``_reconstruct_jit._cache_size()``).
     """
     gs = GeomStatic.of(geom)
+    if strategy == "auto":
+        from repro.tune.cache import resolve_strategy
+
+        strategy, opts = resolve_strategy(gs, opts)
+    validate_strip_opts(geom, matrices, strategy, opts)
     projections = jnp.asarray(projections)
     matrices = jnp.asarray(matrices, jnp.float32)
     if volume is None:
         volume = jnp.zeros((gs.L, gs.L, gs.L), dtype=jnp.float32)
-    opts_tuple = tuple(sorted(opts.items()))
-
-    @functools.partial(jax.jit, static_argnames=())
-    def run(projections, matrices, volume):
-        def body(k, vol):
-            return _backproject_one_jit(vol, projections[k], matrices[k],
-                                        gs, strategy, opts_tuple)
-        return jax.lax.fori_loop(0, projections.shape[0], body, volume)
-
-    return run(projections, matrices, volume)
+    return _reconstruct_jit(projections, matrices, volume, gs, strategy,
+                            tuple(sorted(opts.items())))

@@ -29,7 +29,7 @@ from jax.sharding import Mesh
 from repro.dist.sharding import (ShardingRules, logical_to_spec,
                                  shard_constraint, sharding_context)
 
-from .backproject import GeomStatic, _backproject_one_jit
+from .backproject import GeomStatic, _backproject_one_jit, validate_strip_opts
 from .geometry import Geometry
 
 __all__ = ["sharded_reconstruct", "reconstruct_shards"]
@@ -57,8 +57,18 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     must divide by the product of ``proj_axes`` sizes, and ``geom.L`` by
     the ``volume_axis`` size.  Returns the full ``(L, L, L)`` volume with
     sharding ``P(volume_axis)`` on z.
+
+    ``strategy="auto"`` resolves through the autotuner cache exactly like
+    :func:`repro.core.backproject.reconstruct` — resolution happens here,
+    host-side, before the ``shard_map`` closure is built, so every rank
+    runs one identical strategy.
     """
     gs = GeomStatic.of(geom)
+    if strategy == "auto":
+        from repro.tune.cache import resolve_strategy
+
+        strategy, opts = resolve_strategy(gs, opts)
+    validate_strip_opts(geom, matrices, strategy, opts)
     opts_tuple = tuple(sorted(opts.items()))
     proj_shards = 1
     for ax in proj_axes:

@@ -22,11 +22,27 @@ from repro.core.geometry import Geometry
 
 from .backproject import backproject_volume_pallas
 
-__all__ = ["pallas_backproject_one", "validate_strip_config"]
+__all__ = ["pallas_backproject_one", "validate_strip_config",
+           "clamp_tiles"]
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def clamp_tiles(gs: GeomStatic, ty: int, chunk: int, band: int,
+                width: int) -> tuple[int, int, int, int]:
+    """Geometry-clamp the kernel tile parameters.
+
+    The single definition both :func:`pallas_backproject_one` and the
+    autotuner's candidate validation go through, so a config validated
+    by the sweep is exactly the config the kernel will run.
+    """
+    ty = min(ty, gs.L)
+    chunk = min(chunk, gs.L)
+    band = min(band, max(8, gs.n_v + 2 + (-(gs.n_v + 2)) % 8))
+    width = min(width, max(128, gs.n_u + 2 + (-(gs.n_u + 2)) % 128))
+    return ty, chunk, band, width
 
 
 def _pad_up(image, band: int, width: int):
@@ -92,19 +108,36 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
                            width: int = 512, double_buffer: bool = False,
                            micro: bool = False,
                            interpret: bool | None = None,
-                           validate: bool = False):
+                           validate: bool = False,
+                           strategy: str = "fixed"):
     """Add one projection to ``volume`` using the Pallas kernel.
 
     ``interpret=None`` auto-selects: compiled on TPU, interpreter
     elsewhere.  ``validate=True`` runs the host planner check first
     (cheap; recommended once per geometry).  ``double_buffer=True``
     overlaps strip DMA with compute (hillclimb CT-3).
+
+    ``strategy="auto"`` pulls the tile parameters (``ty``/``chunk``/
+    ``band``/``width``/``double_buffer``/``micro``) from the autotuner
+    cache (:mod:`repro.tune`) for this geometry/backend/device; when the
+    key was never tuned the explicitly passed parameters stand.
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
-    ty = min(ty, gs.L)
-    chunk = min(chunk, gs.L)
-    band = min(band, max(8, gs.n_v + 2 + (-(gs.n_v + 2)) % 8))
-    width = min(width, max(128, gs.n_u + 2 + (-(gs.n_u + 2)) % 128))
+    if strategy == "auto":
+        from repro.tune.cache import resolve_pallas_config
+
+        tuned = resolve_pallas_config(gs)
+        if tuned is not None:
+            ty = int(tuned.get("ty", ty))
+            chunk = int(tuned.get("chunk", chunk))
+            band = int(tuned.get("band", band))
+            width = int(tuned.get("width", width))
+            double_buffer = bool(tuned.get("double_buffer", double_buffer))
+            micro = bool(tuned.get("micro", micro))
+    elif strategy != "fixed":
+        raise ValueError(
+            f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
+    ty, chunk, band, width = clamp_tiles(gs, ty, chunk, band, width)
     if validate:
         if isinstance(geom, GeomStatic):
             raise ValueError("validate=True needs the full Geometry")

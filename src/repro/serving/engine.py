@@ -30,6 +30,33 @@ from repro.models.model import decode_step, init_cache, prefill
 __all__ = ["Request", "ServingEngine"]
 
 
+def _masked_decode_step(params, cache, tokens, index, slot_mask, *, cfg):
+    """One decode step whose cache writes land only on masked-in slots.
+
+    The engine advances slots in groups of equal position index, but
+    ``decode_step`` always runs the full batch: without masking, every
+    group call would also rewrite the cache rows of slots *outside* the
+    group at that group's index — the wrong position.  Merging through
+    ``slot_mask`` keeps out-of-group rows bit-identical to their
+    pre-step state.
+
+    The merge touches every cache leaf in full; masking just the written
+    slice is not possible uniformly because recurrent-state leaves
+    (mamba/slstm) have no time axis — their whole row changes per step.
+    The cost is k(distinct positions) full-cache passes per tick;
+    removing the group loop entirely needs per-slot index support in
+    attention_decode (see the NOTE in ``step``).
+    """
+    logits, new_cache = decode_step(params, cfg, cache, tokens, index)
+
+    def merge(old, new):
+        m = slot_mask.reshape((1, slot_mask.shape[0])
+                              + (1,) * (new.ndim - 2))
+        return jnp.where(m, new, old)
+
+    return logits, jax.tree.map(merge, cache, new_cache)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -54,7 +81,7 @@ class ServingEngine:
         self.index = np.zeros(n_slots, np.int32)      # per-slot position
         self.slot_req: list[Request | None] = [None] * n_slots
         self.queue: list[Request] = []
-        self._step = jax.jit(partial(decode_step, cfg=self.cfg))
+        self._step = jax.jit(partial(_masked_decode_step, cfg=self.cfg))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
@@ -64,24 +91,36 @@ class ServingEngine:
         return [i for i, r in enumerate(self.slot_req) if r is None]
 
     def _admit(self):
-        """Prefill queued requests into free slots (one at a time)."""
+        """Prefill queued requests into free slots (one at a time).
+
+        The first token after prefill is drawn through ``_sample`` (it
+        used to be unconditional argmax, ignoring ``temperature``), and
+        ``max_tokens``/EOS are honoured immediately — a ``max_tokens=1``
+        request retires here without ever occupying a decode slot.
+        """
         for slot in self._free_slots():
-            if not self.queue:
+            while self.queue:
+                req = self.queue.pop(0)
+                toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                # Single-sequence prefill, then splice its cache into the
+                # shared-slot cache at batch row `slot`.
+                logits, cache1 = prefill(self.params, self.cfg,
+                                         {"tokens": toks},
+                                         max_len=self.max_len)
+                self.cache = jax.tree.map(
+                    lambda full, one: full.at[:, slot].set(one[:, 0]),
+                    self.cache, cache1)
+                self.index[slot] = len(req.prompt)
+                tok = int(np.asarray(self._sample(
+                    logits[:, -1].astype(jnp.float32),
+                    jnp.asarray([req.temperature], jnp.float32)))[0])
+                req.out_tokens.append(tok)
+                if (self.eos_id is not None and tok == self.eos_id) \
+                        or len(req.out_tokens) >= req.max_tokens:
+                    req.done = True
+                    continue        # slot still free: admit the next one
+                self.slot_req[slot] = req
                 break
-            req = self.queue.pop(0)
-            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
-            # Single-sequence prefill, then splice its cache into the
-            # shared-slot cache at batch row `slot`.
-            logits, cache1 = prefill(self.params, self.cfg,
-                                     {"tokens": toks},
-                                     max_len=self.max_len)
-            self.cache = jax.tree.map(
-                lambda full, one: full.at[:, slot].set(one[:, 0]),
-                self.cache, cache1)
-            self.slot_req[slot] = req
-            self.index[slot] = len(req.prompt)
-            req.out_tokens.append(
-                int(jnp.argmax(logits[0, -1])))
 
     # ------------------------------------------------------------------
     def _sample(self, logits, temps):
@@ -107,14 +146,20 @@ class ServingEngine:
         # at the max index and rely on per-slot causal masks via cache
         # zero-fill.  Slot-accurate positions need per-slot index support
         # in attention_decode; we conservatively use each slot's own
-        # index by looping groups with equal index.
+        # index by looping groups with equal index.  Each group call runs
+        # the full batch, so the cache update is masked to the group —
+        # otherwise every call would rewrite the other slots' rows at
+        # this group's (wrong) position.
         by_index: dict[int, list[int]] = {}
         for i in active:
             by_index.setdefault(int(self.index[i]), []).append(i)
         for idx in sorted(by_index):
+            slot_mask = np.zeros((self.n_slots,), bool)
+            slot_mask[by_index[idx]] = True
             logits, self.cache = self._step(
                 params=self.params, cache=self.cache,
-                tokens=jnp.asarray(last), index=jnp.int32(idx))
+                tokens=jnp.asarray(last), index=jnp.int32(idx),
+                slot_mask=jnp.asarray(slot_mask))
             toks = np.asarray(self._sample(
                 logits[:, -1].astype(jnp.float32), jnp.asarray(temps)))
             for i in by_index[idx]:

@@ -1,0 +1,22 @@
+"""Strategy autotuning: sweep, cache, and ``strategy="auto"`` resolution.
+
+The paper's contribution is an empirical comparison of gather schemes per
+chip; this package makes that comparison executable and its outcome
+persistent.  See DESIGN.md §6.
+"""
+
+from .cache import (DEFAULT_STRATEGY, TunedConfig, autotune, cache_key,
+                    clear_memory_cache, device_identity, load_tuned,
+                    resolve_pallas_config, resolve_strategy, store_tuned,
+                    tune_dir)
+from .space import Candidate, default_space, jnp_candidates, pallas_candidates
+from .sweep import SweepResult, Timing, sweep_strategies
+from .timing import time_fn
+
+__all__ = [
+    "DEFAULT_STRATEGY", "TunedConfig", "autotune", "cache_key",
+    "clear_memory_cache", "device_identity", "load_tuned",
+    "resolve_pallas_config", "resolve_strategy", "store_tuned", "tune_dir",
+    "Candidate", "default_space", "jnp_candidates", "pallas_candidates",
+    "SweepResult", "Timing", "sweep_strategies", "time_fn",
+]

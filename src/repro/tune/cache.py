@@ -1,0 +1,205 @@
+"""TunedConfig cache: per-(geometry, backend, device) strategy decisions.
+
+A tuned decision is keyed on ``(GeomStatic, backend, device_kind)`` — the
+paper's finding restated as a cache key: the winning gather scheme is a
+property of the *chip*, not of the algorithm, so decisions made on one
+device kind must never leak to another.  Decisions persist as one JSON
+file per key under ``.repro_tune/`` (override with ``REPRO_TUNE_DIR``) so
+a sweep paid once amortises across processes; an in-process dict
+memoises hits.
+
+``strategy="auto"`` consumers call :func:`resolve_strategy` (jnp paths)
+or :func:`resolve_pallas_config` (kernel path); both fall back to the
+current hard-coded defaults when the key was never tuned, so ``auto`` is
+always safe to request.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+from pathlib import Path
+
+import jax
+
+from repro.core.backproject import STRATEGIES, GeomStatic
+
+__all__ = ["TunedConfig", "DEFAULT_STRATEGY", "tune_dir", "cache_key",
+           "store_tuned", "load_tuned", "clear_memory_cache",
+           "device_identity", "resolve_strategy", "resolve_pallas_config",
+           "autotune"]
+
+# What "auto" means before anyone has tuned: the repo's historical
+# hard-coded default.
+DEFAULT_STRATEGY = "strip2"
+
+_PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer", "micro")
+
+# Options each jnp strategy actually accepts — caller options riding
+# along with strategy="auto" are filtered to the *resolved* strategy, so
+# a strip2-flavoured option can never reach e.g. sample_onehot(**opts).
+_STRATEGY_KEYS = {
+    "scalar": (),
+    "gather": (),
+    "onehot": ("vox_block",),
+    "strip": ("chunk", "band", "width", "strips_per_block"),
+    "strip2": ("group", "gband", "gwidth", "groups_per_block"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TunedConfig:
+    """One cached decision plus the sweep evidence behind it."""
+
+    strategy: str                   # best jnp strategy (in STRATEGIES)
+    opts: dict                      # its tile options
+    backend: str
+    device_kind: str
+    us_per_call: float              # best jnp median time
+    pallas: dict | None = None      # best kernel config, when swept
+    pallas_us: float | None = None
+    timings: list = dataclasses.field(default_factory=list)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def tune_dir() -> Path:
+    return Path(os.environ.get("REPRO_TUNE_DIR", ".repro_tune"))
+
+
+def _sanitize(s: str) -> str:
+    return re.sub(r"[^A-Za-z0-9._-]+", "-", s)
+
+
+def device_identity(backend: str | None = None,
+                    device_kind: str | None = None) -> tuple[str, str]:
+    """The ``(backend, device_kind)`` pair cache keys and bench metadata
+    are built from — one definition so they can never disagree."""
+    if backend is None:
+        backend = jax.default_backend()
+    if device_kind is None:
+        dev = jax.devices()[0]
+        device_kind = getattr(dev, "device_kind", str(dev))
+    return backend, device_kind
+
+
+def cache_key(gs: GeomStatic, backend: str, device_kind: str) -> str:
+    geom = (f"ct-L{gs.L}-u{gs.n_u}-v{gs.n_v}"
+            f"-O{gs.O:g}-MM{gs.MM:g}")
+    return f"{geom}--{_sanitize(backend)}--{_sanitize(device_kind)}"
+
+
+_MEM: dict[tuple[str, str], TunedConfig] = {}
+
+
+def clear_memory_cache() -> None:
+    """Drop in-process memoised decisions (tests; tune-dir swaps)."""
+    _MEM.clear()
+
+
+def store_tuned(gs: GeomStatic, cfg: TunedConfig,
+                dirpath: str | os.PathLike | None = None) -> Path:
+    d = Path(dirpath) if dirpath is not None else tune_dir()
+    d.mkdir(parents=True, exist_ok=True)
+    key = cache_key(gs, cfg.backend, cfg.device_kind)
+    path = d / f"{key}.json"
+    path.write_text(json.dumps(cfg.as_dict(), indent=2, sort_keys=True))
+    _MEM[(str(d), key)] = cfg
+    return path
+
+
+def load_tuned(gs: GeomStatic, backend: str | None = None,
+               device_kind: str | None = None,
+               dirpath: str | os.PathLike | None = None
+               ) -> TunedConfig | None:
+    backend, device_kind = device_identity(backend, device_kind)
+    d = Path(dirpath) if dirpath is not None else tune_dir()
+    key = cache_key(gs, backend, device_kind)
+    hit = _MEM.get((str(d), key))
+    if hit is not None:
+        return hit
+    path = d / f"{key}.json"
+    if not path.is_file():
+        return None
+    try:
+        data = json.loads(path.read_text())
+        cfg = TunedConfig(**data)
+    except (json.JSONDecodeError, TypeError, ValueError):
+        return None                 # corrupt cache file: treat as untuned
+    _MEM[(str(d), key)] = cfg
+    return cfg
+
+
+# ----------------------------------------------------------------------
+# "auto" resolution
+# ----------------------------------------------------------------------
+
+def resolve_strategy(gs: GeomStatic, opts: dict | None = None, *,
+                     backend: str | None = None,
+                     device_kind: str | None = None,
+                     dirpath: str | os.PathLike | None = None
+                     ) -> tuple[str, dict]:
+    """Map ``strategy="auto"`` to a concrete jnp strategy + options.
+
+    Untuned keys fall back to :data:`DEFAULT_STRATEGY` with the caller's
+    options untouched, so ``auto`` reproduces today's default behaviour
+    bit-for-bit.  Explicitly passed options override tuned ones per key,
+    but only those the resolved strategy accepts survive — the cache may
+    have tuned a *different* strategy than the one the caller's options
+    were written for.
+    """
+    opts = dict(opts or {})
+    cfg = load_tuned(gs, backend, device_kind, dirpath)
+    if cfg is None or cfg.strategy not in STRATEGIES:
+        strategy, merged = DEFAULT_STRATEGY, opts
+    else:
+        strategy = cfg.strategy
+        merged = dict(cfg.opts)
+        merged.update(opts)
+    allowed = _STRATEGY_KEYS[strategy]
+    return strategy, {k: v for k, v in merged.items() if k in allowed}
+
+
+def resolve_pallas_config(gs: GeomStatic, *, backend: str | None = None,
+                          device_kind: str | None = None,
+                          dirpath: str | os.PathLike | None = None
+                          ) -> dict | None:
+    """Tuned kernel tile config for this key, or ``None`` when untuned."""
+    cfg = load_tuned(gs, backend, device_kind, dirpath)
+    if cfg is None or not cfg.pallas:
+        return None
+    return {k: cfg.pallas[k] for k in _PALLAS_KEYS if k in cfg.pallas}
+
+
+# ----------------------------------------------------------------------
+# End-to-end: sweep this geometry, persist the decision
+# ----------------------------------------------------------------------
+
+def autotune(geom, *, image=None, A=None, space=None,
+             include_pallas: bool | None = None, warmup: int = 1,
+             iters: int = 3,
+             dirpath: str | os.PathLike | None = None) -> TunedConfig:
+    """Sweep ``geom`` on the current backend and cache the winner."""
+    from .sweep import sweep_strategies    # lazy: keeps cache import light
+
+    res = sweep_strategies(geom, image=image, A=A, space=space,
+                           include_pallas=include_pallas, warmup=warmup,
+                           iters=iters)
+    best = res.best(STRATEGIES)
+    if best is None:
+        raise RuntimeError(
+            "autotune swept no valid jnp candidate for this geometry; "
+            f"skipped: {res.skipped}")
+    best_pallas = res.best(("pallas",))
+    cfg = TunedConfig(
+        strategy=best.strategy, opts=dict(best.opts),
+        backend=res.backend, device_kind=res.device_kind,
+        us_per_call=best.us_per_call,
+        pallas=dict(best_pallas.opts) if best_pallas else None,
+        pallas_us=best_pallas.us_per_call if best_pallas else None,
+        timings=[t.as_dict() for t in res.timings])
+    store_tuned(GeomStatic.of(geom), cfg, dirpath)
+    return cfg

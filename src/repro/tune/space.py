@@ -1,0 +1,86 @@
+"""Autotuner search space: candidate (strategy, tile-parameter) points.
+
+The paper's empirical question — which gather/interpolation scheme wins on
+a given chip — maps here to a compact grid over the five jnp strategies
+(DESIGN.md §2) plus the three Pallas kernel variants, each with the tile
+parameters that govern its locality/width trade-off (``chunk``/``band``/
+``width`` for strips, ``group``/``gband``/``gwidth`` for micro-windows,
+``ty``/``double_buffer``/``micro`` for the kernel).  The space is small by
+design: the sweep runs at benchmark time on real hardware, and per
+Hofmann et al. the *ordering* shifts per microarchitecture, not the
+plausible-region boundaries.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.core.backproject import GeomStatic
+
+__all__ = ["Candidate", "jnp_candidates", "pallas_candidates",
+           "default_space"]
+
+
+class Candidate(NamedTuple):
+    """One sweep point: a strategy name plus its static options.
+
+    ``strategy`` is one of ``repro.core.backproject.STRATEGIES`` or
+    ``"pallas"``; ``opts`` is a sorted ``(key, value)`` tuple so candidates
+    are hashable and stable as cache-file keys.
+    """
+
+    strategy: str
+    opts: tuple
+
+    @classmethod
+    def of(cls, strategy: str, **opts) -> "Candidate":
+        return cls(strategy, tuple(sorted(opts.items())))
+
+    @property
+    def label(self) -> str:
+        if not self.opts:
+            return self.strategy
+        txt = ",".join(f"{k}={v}" for k, v in self.opts)
+        return f"{self.strategy}[{txt}]"
+
+
+def jnp_candidates(gs: GeomStatic) -> list[Candidate]:
+    """Candidate grid for the five jnp strategies, clamped to ``gs``."""
+    L = gs.L
+    cands = [Candidate.of("scalar"), Candidate.of("gather")]
+    for vb in (256, 512):
+        cands.append(Candidate.of("onehot", vox_block=min(vb, L * L)))
+    for chunk, band, width in ((32, 16, 128), (64, 16, 256)):
+        cands.append(Candidate.of(
+            "strip", chunk=min(chunk, L), band=min(band, gs.n_v + 2),
+            width=min(width, gs.n_u + 2)))
+    for group, gband, gwidth in ((8, 8, 64), (8, 8, 32), (16, 8, 128)):
+        cands.append(Candidate.of(
+            "strip2", group=min(group, L), gband=min(gband, gs.n_v + 2),
+            gwidth=min(gwidth, gs.n_u + 2)))
+    # De-dup clamped collisions on tiny geometries.
+    seen, out = set(), []
+    for c in cands:
+        if c not in seen:
+            seen.add(c)
+            out.append(c)
+    return out
+
+
+def pallas_candidates(gs: GeomStatic) -> list[Candidate]:
+    """The three kernel variants (plain / double-buffer / micro) at a
+    geometry-clamped base tile."""
+    base = dict(ty=min(8, gs.L), chunk=min(32, gs.L), band=16, width=128)
+    return [
+        Candidate.of("pallas", **base),
+        Candidate.of("pallas", double_buffer=True, **base),
+        Candidate.of("pallas", micro=True, **base),
+    ]
+
+
+def default_space(gs: GeomStatic,
+                  include_pallas: bool = True) -> list[Candidate]:
+    cands = jnp_candidates(gs)
+    if include_pallas:
+        cands += pallas_candidates(gs)
+    return cands

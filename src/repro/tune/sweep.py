@@ -1,0 +1,133 @@
+"""Sweep driver: time every candidate strategy/config on this backend.
+
+The measurement mirrors ``benchmarks/fig1_single_device`` (one projection
+into an ``L^3`` volume, median of a few runs via :func:`timing.time_fn`)
+so tuned decisions and benchmark rows are directly comparable.  Candidates
+whose static windows cannot cover the geometry's tap footprint are
+*skipped with a recorded reason* rather than timed — a config the
+validator rejects would produce silently wrong voxels, and a tuner must
+never select one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backproject import (STRATEGIES, GeomStatic, backproject_one,
+                                    validate_strip_opts)
+from repro.core.geometry import Geometry, projection_matrices, \
+    projection_matrix
+
+from .cache import device_identity
+from .space import Candidate, default_space
+from .timing import time_fn
+
+__all__ = ["Timing", "SweepResult", "sweep_strategies"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Timing:
+    """One measured sweep point."""
+
+    label: str
+    strategy: str
+    opts: tuple
+    us_per_call: float
+    gups: float                     # billions of voxel updates / second
+
+    def as_dict(self) -> dict:
+        return {"label": self.label, "strategy": self.strategy,
+                "opts": dict(self.opts), "us_per_call": self.us_per_call,
+                "gups": self.gups}
+
+
+@dataclasses.dataclass
+class SweepResult:
+    geom_key: tuple
+    backend: str
+    device_kind: str
+    timings: list[Timing]
+    skipped: list[tuple[str, str]]  # (candidate label, reason)
+
+    def best(self, strategies: tuple[str, ...] | None = None):
+        pool = [t for t in self.timings
+                if strategies is None or t.strategy in strategies]
+        return min(pool, key=lambda t: t.us_per_call) if pool else None
+
+
+def _default_problem(geom: Geometry):
+    """One mid-sweep projection of white noise (access-pattern-faithful;
+    the timings do not depend on image content)."""
+    rng = np.random.default_rng(0)
+    image = jnp.asarray(rng.standard_normal((geom.n_v, geom.n_u)),
+                        jnp.float32)
+    theta = float(geom.angles[geom.n_proj // 2])
+    A = jnp.asarray(projection_matrix(geom, theta), jnp.float32)
+    return image, A
+
+
+def sweep_strategies(geom: Geometry, *, image=None, A=None,
+                     space: list[Candidate] | None = None,
+                     include_pallas: bool | None = None,
+                     warmup: int = 1, iters: int = 3) -> SweepResult:
+    """Time every valid candidate for ``geom`` on the current backend.
+
+    ``include_pallas=None`` auto-selects: the kernel is timed only where
+    it compiles (TPU) — interpreter-mode timings would be meaningless.
+    """
+    gs = GeomStatic.of(geom)
+    backend = jax.default_backend()
+    if include_pallas is None:
+        include_pallas = backend == "tpu"
+    if space is None:
+        space = default_space(gs, include_pallas=include_pallas)
+    if image is None or A is None:
+        image, A = _default_problem(geom)
+    # A decision is persisted for the *geometry*, so candidate windows
+    # must cover the footprint at every projection angle — the timing
+    # matrix alone could admit a config that loses taps (or fails
+    # validation) at the sweep extremes once reconstruct() runs the
+    # full set.
+    mats_all = np.asarray(projection_matrices(geom), np.float64)
+    vol0 = jnp.zeros((gs.L,) * 3, jnp.float32)
+
+    timings: list[Timing] = []
+    skipped: list[tuple[str, str]] = []
+    for cand in space:
+        opts = dict(cand.opts)
+        try:
+            if cand.strategy in STRATEGIES:
+                validate_strip_opts(geom, mats_all, cand.strategy, opts)
+                t = time_fn(backproject_one, vol0, image, A, geom,
+                            strategy=cand.strategy, warmup=warmup,
+                            iters=iters, **opts)
+            elif cand.strategy == "pallas":
+                from repro.kernels.backproject_ops import (
+                    clamp_tiles, pallas_backproject_one,
+                    validate_strip_config)
+                ty, chunk, band, width = clamp_tiles(
+                    gs, opts.get("ty", 8), opts.get("chunk", 128),
+                    opts.get("band", 16), opts.get("width", 512))
+                for A_i in mats_all:
+                    validate_strip_config(geom, A_i, ty=ty, chunk=chunk,
+                                          band=band, width=width)
+                t = time_fn(pallas_backproject_one, vol0, image, A, geom,
+                            warmup=warmup, iters=iters, **opts)
+            else:
+                raise ValueError(f"unknown candidate strategy "
+                                 f"{cand.strategy!r}")
+        except ValueError as e:
+            skipped.append((cand.label, str(e)))
+            continue
+        timings.append(Timing(
+            label=cand.label, strategy=cand.strategy, opts=cand.opts,
+            us_per_call=t * 1e6, gups=gs.L ** 3 / t / 1e9))
+
+    backend, device_kind = device_identity(backend)
+    return SweepResult(geom_key=tuple(gs), backend=backend,
+                       device_kind=device_kind,
+                       timings=timings, skipped=skipped)

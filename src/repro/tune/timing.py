@@ -1,0 +1,29 @@
+"""Wall-clock timing of jitted callables (shared by tune + benchmarks).
+
+One implementation serves both the benchmark harness (``benchmarks/common``
+re-exports it) and the autotuner sweep driver, so a tuned decision and a
+benchmark row are always comparable numbers.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+__all__ = ["time_fn"]
+
+
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
+    """Median wall time (seconds) of jitted ``fn``; blocks on results."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))

@@ -1,0 +1,66 @@
+"""Benchmark harness: --only validation and the --json perf trajectory."""
+
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks import run as bench_run
+from repro.core.backproject import STRATEGIES
+from repro.tune import clear_memory_cache
+
+
+def test_only_typo_lists_modules_and_exits_nonzero(capsys):
+    """An unknown --only name must not print a lone CSV header and
+    exit 0 (the old behaviour); it lists valid modules and fails."""
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--only", "fig1_single_devise"])
+    assert exc.value.code == 2
+    captured = capsys.readouterr()
+    assert "unknown module" in captured.err
+    for name, _ in bench_run.MODULES:
+        assert name in captured.err
+    assert "name,us_per_call" not in captured.out
+
+
+def test_known_only_name_is_accepted():
+    # Argument validation only — pick a module and make sure parsing
+    # passes (moe_dispatch is the cheapest real module, but any name in
+    # MODULES must clear the check; we don't execute it here).
+    names = [n for n, _ in bench_run.MODULES]
+    assert "fig1_single_device" in names
+
+
+def test_json_trajectory_from_tiny_fig1(tmp_path, monkeypatch):
+    """The harness writes BENCH-style json: per-strategy us/call,
+    voxel-updates/s, and the autotuner's chosen config — and appends on
+    the next run instead of overwriting."""
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    monkeypatch.setattr(common, "TINY", True)
+    path = tmp_path / "bench.json"
+
+    bench_run.main(["--only", "fig1_single_device", "--json", str(path)])
+    doc = json.loads(path.read_text())
+    assert len(doc["runs"]) == 1
+    run0 = doc["runs"][0]
+    assert run0["meta"]["tiny"] is True
+    assert run0["meta"]["failures"] == 0
+
+    rows = {r["name"]: r for r in run0["rows"]}
+    for strat in STRATEGIES + ("auto",):
+        row = rows[f"fig1/{strat}"]
+        assert row["us_per_call"] > 0
+        assert row["fields"]["gups"] > 0          # voxel-updates/s
+
+    tuned = run0["extras"]["tuned_config"]
+    assert tuned["strategy"] in STRATEGIES
+    assert rows["fig1/auto"]["fields"]["chosen"] == tuned["strategy"]
+    assert len(tuned["timings"]) >= 5
+
+    # Second run appends a trajectory entry with *fresh* rows (main()
+    # resets the collection state, so nothing from run 1 replays).
+    bench_run.main(["--only", "fig1_single_device", "--json", str(path)])
+    doc = json.loads(path.read_text())
+    assert len(doc["runs"]) == 2
+    assert len(doc["runs"][1]["rows"]) == len(run0["rows"])

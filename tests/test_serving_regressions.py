@@ -1,0 +1,107 @@
+"""Serving-engine regressions: grouped-decode cache masking + admit path.
+
+Two silent-wrong-result fixes pinned here:
+
+* ``step`` advances slots in groups of equal position index, but each
+  group call runs the *full* batch — before the fix, every call rewrote
+  the cache rows of out-of-group slots at that group's (wrong) index, so
+  any mix of prompt lengths produced corrupted continuations.
+* ``_admit`` appended an unconditional argmax token after prefill,
+  ignoring ``temperature`` and overshooting ``max_tokens=1``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.models.model import init_model
+from repro.serving import Request, ServingEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_lm():
+    cfg = ARCHS["chatglm3-6b"].reduced()
+    params, _ = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _prompts(cfg):
+    rng = np.random.default_rng(0)
+    # Different lengths on purpose: equal lengths put every slot in one
+    # index group and never exercise the masked merge.
+    return [rng.integers(0, cfg.vocab, size=4),
+            rng.integers(0, cfg.vocab, size=7)]
+
+
+def test_grouped_decode_matches_single_slot_runs(tiny_lm):
+    """Two slots at different positions decode exactly like solo runs."""
+    cfg, params = tiny_lm
+    prompts = _prompts(cfg)
+
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64)
+    reqs = [Request(rid=i, prompt=p, max_tokens=5)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run_until_done(max_ticks=100)
+
+    for i, p in enumerate(prompts):
+        solo = ServingEngine(cfg, params, n_slots=1, max_len=64)
+        ref = Request(rid=i, prompt=p, max_tokens=5)
+        solo.submit(ref)
+        solo.run_until_done(max_ticks=100)
+        assert reqs[i].out_tokens == ref.out_tokens, \
+            (i, reqs[i].out_tokens, ref.out_tokens)
+
+
+def test_admit_honors_max_tokens_one(tiny_lm):
+    """A max_tokens=1 request retires at admit with exactly one token."""
+    cfg, params = tiny_lm
+    eng = ServingEngine(cfg, params, n_slots=2, max_len=64)
+    req = Request(rid=0, prompt=_prompts(cfg)[0], max_tokens=1)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=50)
+    assert req.done
+    assert len(req.out_tokens) == 1
+    # ...and it never occupied a slot past admit.
+    assert eng.slot_req == [None, None]
+
+
+def test_admit_first_token_routed_through_sample(tiny_lm):
+    """The post-prefill token respects temperature (goes via _sample)."""
+    cfg, params = tiny_lm
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=64)
+    calls = []
+    orig = eng._sample
+
+    def spy(logits, temps):
+        calls.append(np.asarray(temps).copy())
+        return orig(logits, temps)
+
+    eng._sample = spy
+    req = Request(rid=0, prompt=_prompts(cfg)[0], max_tokens=1,
+                  temperature=0.7)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=50)
+    assert len(calls) == 1 and float(calls[0][0]) == pytest.approx(0.7)
+    assert len(req.out_tokens) == 1
+
+
+def test_greedy_first_token_is_argmax(tiny_lm):
+    """temperature=0 keeps the pre-fix greedy behaviour bit-for-bit."""
+    cfg, params = tiny_lm
+    from repro.models.model import prefill
+
+    prompt = _prompts(cfg)[0]
+    logits, _ = prefill(params, cfg,
+                        {"tokens": jnp.asarray(prompt, jnp.int32)[None, :]},
+                        max_len=64)
+    expect = int(jnp.argmax(logits[0, -1]))
+
+    eng = ServingEngine(cfg, params, n_slots=1, max_len=64)
+    req = Request(rid=0, prompt=prompt, max_tokens=1)
+    eng.submit(req)
+    eng.run_until_done(max_ticks=50)
+    assert req.out_tokens == [expect]

@@ -86,3 +86,52 @@ def test_backproject_matches_scalar_oracle(strategy):
     # Border geometry must leave genuinely zero (out-of-detector) voxels
     # *and* nonzero ones, or the case proves nothing.
     assert (ref == 0.0).any() and (ref != 0.0).any()
+
+
+def test_wide_footprint_windows_are_loud_or_correct():
+    """Adversarial tap-loss hazard: at L=48 the per-chunk footprint
+    outgrows small strip windows.  ``reconstruct`` must either produce
+    the correct result (windows large enough) or raise loudly — never
+    silently drop taps (gband=4 used to do exactly that)."""
+    from repro.core import reconstruct
+    from repro.core.geometry import projection_matrices
+
+    geom = Geometry().scaled(48, n_proj=4)
+    rng = np.random.default_rng(7)
+    imgs = rng.standard_normal(
+        (geom.n_proj, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = projection_matrices(geom)
+
+    # Undersized windows: loud planner-backed error, not silent wrong.
+    with pytest.raises(ValueError, match="does not cover"):
+        reconstruct(imgs, mats, geom, strategy="strip2", gband=4)
+    with pytest.raises(ValueError, match="does not cover"):
+        reconstruct(imgs, mats, geom, strategy="strip", band=4)
+
+    # Default windows validate and match the scalar oracle.
+    ref = np.asarray(reconstruct(imgs, mats, geom, strategy="scalar"))
+    for strategy in ("strip", "strip2"):
+        out = np.asarray(reconstruct(imgs, mats, geom, strategy=strategy))
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_full_window_is_satisfiable_on_tiny_detector():
+    """The planner margin can push the raw requirement past the padded
+    image itself (width 15 > n_u+2 = 14 on this geometry) — but a
+    full-detector window clamps its origin to 0 and covers everything,
+    so validation must accept it and the result must stay exact."""
+    from repro.core import reconstruct
+    from repro.core.geometry import projection_matrices
+
+    geom = Geometry().scaled(16, n_proj=4, n_u=12, n_v=8)
+    rng = np.random.default_rng(5)
+    imgs = rng.standard_normal(
+        (geom.n_proj, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = projection_matrices(geom)
+    ref = np.asarray(reconstruct(imgs, mats, geom, strategy="scalar"))
+    out = np.asarray(reconstruct(imgs, mats, geom, strategy="strip",
+                                 chunk=16, band=64, width=64))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+    out2 = np.asarray(reconstruct(imgs, mats, geom, strategy="strip2",
+                                  group=16, gband=64, gwidth=64))
+    np.testing.assert_allclose(out2, ref, rtol=1e-5, atol=1e-5)

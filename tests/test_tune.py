@@ -1,0 +1,164 @@
+"""Autotuner subsystem: sweep, cache, strategy="auto", jit-cache stability.
+
+Every test isolates the on-disk cache in a tmp dir (``REPRO_TUNE_DIR``)
+and drops the in-process memo, so decisions never leak between tests or
+from a developer's ``.repro_tune/``.
+"""
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Geometry, filter_projections, reconstruct
+from repro.core.backproject import (GeomStatic, STRATEGIES,
+                                    _reconstruct_jit)
+from repro.core.phantom import make_dataset
+from repro.kernels.backproject_ops import pallas_backproject_one
+from repro.tune import (Candidate, TunedConfig, autotune, clear_memory_cache,
+                        device_identity, load_tuned, store_tuned,
+                        sweep_strategies)
+
+GEOM = Geometry().scaled(16, n_proj=4)
+GS = GeomStatic.of(GEOM)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tune_dir(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    yield
+    clear_memory_cache()
+
+
+@pytest.fixture(scope="module")
+def ct_case():
+    projs, mats, _ = make_dataset(GEOM)
+    filt = np.asarray(filter_projections(projs, GEOM))
+    return filt, mats
+
+
+def test_auto_untuned_matches_strip2_bitwise(ct_case):
+    """Acceptance: untuned auto == strip2 defaults, bit for bit."""
+    filt, mats = ct_case
+    a = np.asarray(reconstruct(filt, mats, GEOM, strategy="auto"))
+    b = np.asarray(reconstruct(filt, mats, GEOM, strategy="strip2"))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_auto_follows_tuned_cache(ct_case):
+    """A stored decision redirects auto (bitwise vs the explicit call)."""
+    filt, mats = ct_case
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="gather", opts={}, backend=backend,
+                      device_kind=device_kind, us_per_call=1.0)
+    store_tuned(GS, cfg)
+    a = np.asarray(reconstruct(filt, mats, GEOM, strategy="auto"))
+    b = np.asarray(reconstruct(filt, mats, GEOM, strategy="gather"))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(reconstruct(filt, mats, GEOM, strategy="strip2"))
+    assert not np.array_equal(a, c)
+
+
+def test_auto_filters_mismatched_caller_opts(ct_case):
+    """Options written for the fallback strategy must not crash when the
+    cache tuned a different one (sample_onehot(gband=...) TypeError)."""
+    filt, mats = ct_case
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="onehot", opts={"vox_block": 64},
+                      backend=backend, device_kind=device_kind,
+                      us_per_call=1.0)
+    store_tuned(GS, cfg)
+    a = np.asarray(reconstruct(filt, mats, GEOM, strategy="auto", gband=8))
+    b = np.asarray(reconstruct(filt, mats, GEOM, strategy="onehot",
+                               vox_block=64))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_autotune_sweeps_and_persists_roundtrip():
+    cfg = autotune(GEOM, include_pallas=False, warmup=0, iters=1)
+    assert cfg.strategy in STRATEGIES
+    assert cfg.us_per_call > 0
+    # Every timed candidate carries comparable numbers.
+    assert len(cfg.timings) >= 5
+    assert all(t["us_per_call"] > 0 and t["gups"] > 0
+               for t in cfg.timings)
+    clear_memory_cache()                      # force the disk path
+    back = load_tuned(GS)
+    assert back is not None
+    assert (back.strategy, back.opts) == (cfg.strategy, cfg.opts)
+
+
+def test_sweep_skips_undersized_windows():
+    """A candidate the planner rejects is skipped, never timed."""
+    bad = Candidate.of("strip2", group=8, gband=2, gwidth=8)
+    ok = Candidate.of("gather")
+    res = sweep_strategies(GEOM, space=[bad, ok], include_pallas=False,
+                           warmup=0, iters=1)
+    assert [t.strategy for t in res.timings] == ["gather"]
+    assert len(res.skipped) == 1
+    assert "does not cover" in res.skipped[0][1]
+
+
+def test_cache_file_is_json_keyed_on_device(tmp_path, monkeypatch):
+    import jax
+    cfg = autotune(GEOM, include_pallas=False, warmup=0, iters=1)
+    files = list((tmp_path / "tune").glob("*.json"))
+    assert len(files) == 1
+    name = files[0].name
+    assert f"L{GEOM.L}" in name and jax.default_backend() in name
+    data = json.loads(files[0].read_text())
+    assert data["strategy"] == cfg.strategy
+
+
+def test_reconstruct_jit_cache_is_stable(ct_case):
+    """Repeated reconstruct() calls must not recompile (the old inline
+    ``@jax.jit`` closure recompiled on every invocation)."""
+    filt, mats = ct_case
+    reconstruct(filt, mats, GEOM, strategy="gather")
+    size_after_first = _reconstruct_jit._cache_size()
+    for _ in range(3):
+        reconstruct(filt, mats, GEOM, strategy="gather")
+    assert _reconstruct_jit._cache_size() == size_after_first
+
+
+def test_pallas_auto_uses_tuned_tiles(ct_case):
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    img, A = jnp.asarray(filt[0]), jnp.asarray(mats[0])
+
+    # Untuned: auto falls back to the passed parameters.
+    out_auto = pallas_backproject_one(vol0, img, A, GEOM, ty=4, chunk=8,
+                                      band=16, width=128, strategy="auto")
+    out_fix = pallas_backproject_one(vol0, img, A, GEOM, ty=4, chunk=8,
+                                     band=16, width=128)
+    np.testing.assert_array_equal(np.asarray(out_auto), np.asarray(out_fix))
+
+    # Tuned: auto picks the cached tile config (micro variant here).
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="strip2", opts={}, backend=backend,
+                      device_kind=device_kind, us_per_call=1.0,
+                      pallas={"ty": 8, "chunk": 16, "band": 16,
+                              "width": 128, "micro": True})
+    store_tuned(GS, cfg)
+    out_auto = pallas_backproject_one(vol0, img, A, GEOM, strategy="auto")
+    out_fix = pallas_backproject_one(vol0, img, A, GEOM, ty=8, chunk=16,
+                                     band=16, width=128, micro=True)
+    np.testing.assert_array_equal(np.asarray(out_auto), np.asarray(out_fix))
+
+    with pytest.raises(ValueError, match="fixed.*auto|auto.*fixed"):
+        pallas_backproject_one(vol0, img, A, GEOM, strategy="strip")
+
+
+def test_sharded_reconstruct_auto(ct_case):
+    """auto resolves host-side before shard_map (1x1 mesh, bitwise)."""
+    from repro.core.pipeline import sharded_reconstruct
+    from repro.launch.mesh import make_local_mesh
+
+    filt, mats = ct_case
+    mesh = make_local_mesh(data=1, model=1)
+    a = np.asarray(sharded_reconstruct(filt, mats, GEOM, mesh,
+                                       strategy="auto"))
+    b = np.asarray(reconstruct(filt, mats, GEOM, strategy="strip2"))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
