@@ -1,0 +1,123 @@
+"""Bench-trajectory regression gate (CI's ``bench-trajectory`` job).
+
+Compares the freshest run entry in a just-produced ``--json`` file
+against the most recent *committed* BENCH_ct.json entry for the same
+``(backend, device_kind, tiny)`` identity, row by row (``us_per_call``
+per emitted benchmark name).  The threshold is deliberately generous —
+CI runners are noisy and shared — and µs-scale rows below ``--min-us``
+are skipped outright (their medians are timer noise even after the
+adaptive ``time_fn``).  No matching baseline (new device kind, first
+run) passes with a notice: the gate compares like with like or not at
+all.
+
+``python -m benchmarks.check_regression --baseline BENCH_ct.json \
+    --fresh bench.json [--threshold 4.0] [--min-us 200]``
+
+Exit status: 0 = no regression (or nothing comparable), 1 = at least
+one row regressed past the threshold, 2 = bad invocation/unreadable
+input.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def _load_runs(path: str) -> list[dict] | None:
+    """Runs list, ``[]`` for a missing file, ``None`` for an unreadable
+    one — a *corrupt* committed baseline must fail the gate loudly, not
+    disable it by looking like 'no baseline'."""
+    p = Path(path)
+    if not p.is_file():
+        return []
+    try:
+        doc = json.loads(p.read_text())
+    except json.JSONDecodeError:
+        return None
+    runs = doc.get("runs") if isinstance(doc, dict) else None
+    return runs if isinstance(runs, list) else None
+
+
+def _identity(run: dict) -> tuple:
+    meta = run.get("meta", {})
+    return (meta.get("backend"), meta.get("device_kind"),
+            bool(meta.get("tiny")))
+
+
+def _rows(run: dict) -> dict[str, float]:
+    out = {}
+    for row in run.get("rows", []):
+        name = row.get("name")
+        us = row.get("us_per_call")
+        if isinstance(name, str) and isinstance(us, (int, float)) and us > 0:
+            out[name] = float(us)
+    return out
+
+
+def compare(baseline_run: dict, fresh_run: dict, *, threshold: float,
+            min_us: float) -> tuple[list[tuple[str, float, float]], int]:
+    """Return (regressions, n_compared); a regression is
+    ``(row name, baseline us, fresh us)``."""
+    base = _rows(baseline_run)
+    fresh = _rows(fresh_run)
+    regressions = []
+    n = 0
+    for name, base_us in sorted(base.items()):
+        fresh_us = fresh.get(name)
+        if fresh_us is None or base_us < min_us:
+            continue
+        n += 1
+        if fresh_us > threshold * base_us:
+            regressions.append((name, base_us, fresh_us))
+    return regressions, n
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed trajectory (BENCH_ct.json)")
+    ap.add_argument("--fresh", required=True,
+                    help="just-produced --json file to gate")
+    ap.add_argument("--threshold", type=float, default=4.0,
+                    help="fail when fresh > threshold * baseline")
+    ap.add_argument("--min-us", type=float, default=200.0,
+                    help="skip rows whose baseline is below this (noise)")
+    args = ap.parse_args(argv)
+
+    fresh_runs = _load_runs(args.fresh)
+    if not fresh_runs:
+        print(f"no runs in {args.fresh}; nothing to gate", file=sys.stderr)
+        raise SystemExit(2)
+    fresh_run = fresh_runs[-1]
+    ident = _identity(fresh_run)
+
+    baseline_runs = _load_runs(args.baseline)
+    if baseline_runs is None:
+        print(f"baseline {args.baseline} is unreadable; refusing to pass "
+              f"vacuously", file=sys.stderr)
+        raise SystemExit(2)
+    candidates = [r for r in baseline_runs if _identity(r) == ident]
+    if not candidates:
+        print(f"# no committed baseline for backend/device_kind/tiny="
+              f"{ident}; gate passes vacuously")
+        return
+    baseline_run = candidates[-1]
+
+    regressions, n = compare(baseline_run, fresh_run,
+                             threshold=args.threshold, min_us=args.min_us)
+    print(f"# compared {n} row(s) against baseline "
+          f"{baseline_run.get('timestamp', '?')} (threshold "
+          f"{args.threshold}x, min {args.min_us}us)")
+    for name, base_us, fresh_us in regressions:
+        print(f"REGRESSION {name}: {base_us:.1f}us -> {fresh_us:.1f}us "
+              f"({fresh_us / base_us:.2f}x)")
+    if regressions:
+        raise SystemExit(1)
+    print("# no regressions")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,27 +5,33 @@ projection on one device — the paper's single-core SIMD comparison.
 (The SMT column of Fig. 1 has no single-device analogue here; latency
 hiding is the Pallas grid pipeline, measured structurally in fig3.)
 
-After the per-strategy rows, the autotuner sweeps its candidate space on
-this geometry, persists the winner (``.repro_tune/``), and the
-``fig1/auto`` row times ``strategy="auto"`` resolving through that cache
-— the chosen config lands in the ``--json`` trajectory via
-``record_extra``.
+After the per-strategy rows, ``fig1/batch/p*`` times the projection-
+batched loop nest (DESIGN.md §7) against the per-projection nest at
+several ``pbatch`` depths — same strategy, same projections, only the
+volume-residency structure changes.  Then the autotuner sweeps its
+candidate space on this geometry (now including the ``pbatch`` axis),
+persists the winner (``.repro_tune/``), and the ``fig1/auto`` row times
+``strategy="auto"`` resolving through that cache — the chosen config
+lands in the ``--json`` trajectory via ``record_extra``.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.backproject import STRATEGIES, backproject_one
+from repro.core.backproject import STRATEGIES, backproject_one, reconstruct
 from repro.tune import autotune
 
 from .common import (STRATEGY_OPTS, bench_size, ct_problem, emit,
                      record_extra, time_fn)
 
+PBATCHES = (1, 2, 4)
+
 
 def run(L: int | None = None):
     L = bench_size(96, 16) if L is None else L
-    geom, filt, mats, _ = ct_problem(L, n_proj=bench_size(4, 2))
+    n_proj = bench_size(4, 2)
+    geom, filt, mats, _ = ct_problem(L, n_proj=n_proj)
     vol0 = jnp.zeros((L,) * 3, jnp.float32)
     image = jnp.asarray(filt[0])
     A = jnp.asarray(mats[0])
@@ -36,11 +42,38 @@ def run(L: int | None = None):
         emit(f"fig1/{strat}", t * 1e6,
              f"gups={L ** 3 / t / 1e9:.4f} L={L}")
 
+    # Batched vs per-projection: full n_proj reconstruction per call,
+    # pbatch=1 is the classical nest.  gups counts every voxel update.
+    # Depths clamp to n_proj (tiny mode) — emit the *effective* depth
+    # once, never a duplicate measurement under an inflated label.
+    for pb in sorted({min(pb, n_proj) for pb in PBATCHES}):
+        t = time_fn(reconstruct, filt, mats, geom, strategy="strip2",
+                    pbatch=pb, warmup=1, iters=2,
+                    **STRATEGY_OPTS["strip2"])
+        emit(f"fig1/batch/p{pb}", t * 1e6,
+             f"gups={n_proj * L ** 3 / t / 1e9:.4f} L={L} pbatch={pb} "
+             f"nproj={n_proj}")
+
     cfg = autotune(geom, image=image, A=A, warmup=1, iters=3)
-    t = time_fn(backproject_one, vol0, image, A, geom,
-                strategy=cfg.strategy, warmup=1, iters=3, **cfg.opts)
+    opts = dict(cfg.opts)
+    pbatch = int(opts.pop("pbatch", 1))
+    if pbatch == 1:
+        t = time_fn(backproject_one, vol0, image, A, geom,
+                    strategy=cfg.strategy, warmup=1, iters=3, **opts)
+    else:
+        # Same problem construction as the sweep that picked this
+        # config: distinct matrices, so the strip-origin churn (and
+        # therefore the cost) matches the number the tuner measured.
+        from repro.core.backproject import backproject_batch
+        from repro.tune.sweep import _batch_problem
+
+        images, mats_b = _batch_problem(geom, image, pbatch)
+        t = time_fn(backproject_batch, vol0, images, mats_b, geom,
+                    strategy=cfg.strategy, pbatch=pbatch, warmup=1,
+                    iters=3, **opts) / pbatch
     emit("fig1/auto", t * 1e6,
-         f"gups={L ** 3 / t / 1e9:.4f} L={L} chosen={cfg.strategy}")
+         f"gups={L ** 3 / t / 1e9:.4f} L={L} chosen={cfg.strategy} "
+         f"pbatch={pbatch}")
     record_extra("tuned_config", cfg.as_dict())
 
 

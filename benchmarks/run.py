@@ -8,6 +8,7 @@ module                      paper artifact
 table2_op_census            Table 2 (instruction count/composition/part)
 table3_efficiency           Table 3 (+ section-5 clipping-mask claim)
 table4_gather_micro         Table 4 (gather latency vs distribution)
+table5_traffic              beyond-paper: volume-HBM-traffic model vs time
 fig1_single_device          Fig. 1 (single-core strategy comparison)
 fig2_scaling                Fig. 2 (full-system scaling)
 fig3_codegen                Fig. 3 (compiler vs hand-structured)
@@ -16,7 +17,7 @@ quality                     RabbitCT accuracy score (PSNR)
 lm_gather                   the technique on the assigned LM archs
 ==========================  ==============================================
 
-``python -m benchmarks.run [--only name] [--json PATH] [--tiny]``
+``python -m benchmarks.run [--only name[,name...]] [--json PATH] [--tiny]``
 
 ``--json PATH`` appends one machine-readable run entry (device meta,
 every emitted row with its parsed ``key=value`` fields, and structured
@@ -40,13 +41,14 @@ from . import common
 from . import (ct_hillclimb, cycle_model, fig1_single_device,
                fig2_scaling, fig3_codegen, lm_gather, moe_dispatch,
                quality, table2_op_census, table3_efficiency,
-               table4_gather_micro)
+               table4_gather_micro, table5_traffic)
 
 MODULES = [
     ("table2_op_census", table2_op_census),
     ("table3_efficiency", table3_efficiency),
     ("table4_gather_micro", table4_gather_micro),
     ("fig1_single_device", fig1_single_device),
+    ("table5_traffic", table5_traffic),
     ("fig2_scaling", fig2_scaling),
     ("fig3_codegen", fig3_codegen),
     ("cycle_model", cycle_model),
@@ -92,17 +94,22 @@ def _write_json(path: str, ran: list[str], n_fail: int) -> None:
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="run a single module by name")
+                    help="run selected modules (comma-separated names)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="append a machine-readable run entry to PATH")
     ap.add_argument("--tiny", action="store_true",
                     help="CI-sized problem shapes")
     args = ap.parse_args(argv)
     names = [n for n, _ in MODULES]
-    if args.only is not None and args.only not in names:
-        print(f"unknown module {args.only!r}; valid modules: "
-              f"{', '.join(names)}", file=sys.stderr)
-        raise SystemExit(2)
+    only = None
+    if args.only is not None:
+        only = [n.strip() for n in args.only.split(",") if n.strip()]
+        bad = [n for n in only if n not in names]
+        if bad or not only:
+            missing = ", ".join(repr(n) for n in (bad or [args.only]))
+            print(f"unknown module {missing}; valid modules: "
+                  f"{', '.join(names)}", file=sys.stderr)
+            raise SystemExit(2)
     if args.tiny:
         common.TINY = True
     # Fresh collection state per invocation: a second in-process main()
@@ -114,7 +121,7 @@ def main(argv=None) -> None:
     n_fail = 0
     ran = []
     for name, mod in MODULES:
-        if args.only and args.only != name:
+        if only is not None and name not in only:
             continue
         ran.append(name)
         t0 = time.time()

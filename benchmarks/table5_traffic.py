@@ -1,0 +1,96 @@
+"""Table 5 (beyond-paper): modelled volume HBM traffic vs measured time.
+
+The back projection is memory-bound on its streaming part (the paper's
+kernels sustain a handful of flops per voxel update; Treibig et al.,
+arXiv:1104.5243, show throughput on real hardware is decided by the
+volume-locality structure).  The loop-nest inversion of DESIGN.md §7
+makes the dominant traffic term explicit:
+
+* **volume**: each projection batch streams the ``L³`` f32 volume
+  through memory once (read + write) —
+  ``2 · ceil(n_proj / pbatch) · L³ · 4`` bytes;
+* **projections**: one ``(band, width)`` strip DMA per (projection,
+  volume tile) — ``n_proj · (L/ty) · (L/chunk) · L · band · width · 4``
+  bytes on the kernel path, independent of ``pbatch``.
+
+This module reports the modelled bytes *next to* the measured time per
+``pbatch`` so the P× volume-traffic reduction is a committed number in
+BENCH_ct.json, not an anecdote.  The ``table5/chosen`` row re-states the
+model at the autotuner's persisted ``pbatch`` for this geometry.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.backproject import DEFAULT_PBATCH, GeomStatic, reconstruct
+
+from .common import bench_size, ct_problem, emit, record_extra, time_fn
+from .fig1_single_device import PBATCHES
+
+# Default kernel-path strip tile (matches the Pallas defaults at bench
+# scale) for the projection-traffic term of the model.
+_TY, _CHUNK, _BAND, _WIDTH = 8, 32, 16, 128
+
+
+def volume_bytes(L: int, n_proj: int, pbatch: int) -> int:
+    """Modelled volume HBM bytes per reconstruction (f32 read+write per
+    volume pass; one pass per projection batch)."""
+    return 2 * math.ceil(n_proj / pbatch) * L ** 3 * 4
+
+
+def strip_bytes(L: int, n_proj: int, *, ty: int = _TY, chunk: int = _CHUNK,
+                band: int = _BAND, width: int = _WIDTH) -> int:
+    """Modelled projection-strip HBM bytes (kernel path): one
+    ``(band, width)`` DMA per (projection, z, y-block, x-chunk) tile.
+    Independent of ``pbatch`` — batching cuts only the volume term."""
+    tiles = L * max(1, L // ty) * max(1, L // chunk)
+    return n_proj * tiles * band * width * 4
+
+
+def run(L: int | None = None, n_proj: int | None = None):
+    L = bench_size(64, 16) if L is None else L
+    n_proj = bench_size(8, 4) if n_proj is None else n_proj
+    geom, filt, mats, _ = ct_problem(L, n_proj=n_proj)
+    sb = strip_bytes(L, n_proj)
+
+    seq_bytes = volume_bytes(L, n_proj, 1)
+    rows = {}
+    for pb in sorted({min(pb, n_proj) for pb in PBATCHES}):
+        t = time_fn(reconstruct, filt, mats, geom, strategy="strip2",
+                    pbatch=pb, warmup=1, iters=2)
+        vb = volume_bytes(L, n_proj, pb)
+        rows[pb] = {"us": t * 1e6, "vol_bytes": vb, "strip_bytes": sb,
+                    "vol_reduction": seq_bytes / vb}
+        emit(f"table5/pbatch{pb}", t * 1e6,
+             f"vol_mb={vb / 1e6:.3f} strip_mb={sb / 1e6:.3f} "
+             f"vol_reduction={seq_bytes / vb:.2f} pbatch={pb} L={L} "
+             f"nproj={n_proj}")
+
+    # The autotuner's decision for this geometry (fig1 runs the sweep
+    # earlier in the module order; untuned keys fall back to the
+    # default depth).
+    from repro.tune.cache import load_tuned
+
+    cfg = load_tuned(GeomStatic.of(geom))
+    chosen = cfg.pbatch if cfg is not None else DEFAULT_PBATCH
+    chosen = max(1, min(chosen, n_proj))
+    vb = volume_bytes(L, n_proj, chosen)
+    t = time_fn(reconstruct, filt, mats, geom, strategy="auto",
+                warmup=1, iters=2)
+    emit("table5/chosen", t * 1e6,
+         f"vol_mb={vb / 1e6:.3f} strip_mb={sb / 1e6:.3f} "
+         f"vol_reduction={seq_bytes / vb:.2f} pbatch={chosen} L={L} "
+         f"nproj={n_proj}")
+    record_extra("table5_traffic", {
+        "L": L, "n_proj": n_proj, "chosen_pbatch": chosen,
+        "volume_bytes_seq": seq_bytes,
+        "volume_bytes_chosen": vb,
+        "volume_reduction_chosen": seq_bytes / vb,
+        "strip_bytes": sb,
+        "per_pbatch": {str(k): v for k, v in rows.items()},
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -40,6 +40,9 @@ def main():
     ap.add_argument("--L", type=int, default=48)
     ap.add_argument("--proj", type=int, default=96)
     ap.add_argument("--strategy", default="strip2")
+    ap.add_argument("--pbatch", type=int, default=None,
+                    help="projections folded per volume pass (DESIGN.md "
+                         "§7); default: autotuned value, else 4")
     ap.add_argument("--full-sweep", action="store_true",
                     help="360-degree scan instead of the 200-degree "
                          "C-arm short scan")
@@ -67,7 +70,8 @@ def main():
           "voxels contribute (sampled)")
 
     t0 = time.time()
-    vol = reconstruct(filt, mats, geom, strategy=args.strategy)
+    vol = reconstruct(filt, mats, geom, strategy=args.strategy,
+                      pbatch=args.pbatch)
     vol.block_until_ready()
     dt = time.time() - t0
     gups = geom.L ** 3 * geom.n_proj / dt / 1e9

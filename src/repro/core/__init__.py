@@ -4,11 +4,15 @@ Public surface re-exported here; see DESIGN.md for the x86->TPU mapping.
 """
 
 from .backproject import (  # noqa: F401
+    DEFAULT_PBATCH,
     STRATEGIES,
     GeomStatic,
     accumulate,
+    backproject_batch,
     backproject_one,
     backproject_plane,
+    backproject_plane_batch,
+    contribution,
     plane_coords,
     reconstruct,
     sample_gather,

@@ -52,6 +52,7 @@ from .geometry import Geometry
 
 __all__ = [
     "STRATEGIES",
+    "DEFAULT_PBATCH",
     "GeomStatic",
     "plane_coords",
     "sample_scalar",
@@ -59,14 +60,23 @@ __all__ = [
     "sample_onehot",
     "sample_strip",
     "sample_strip2",
+    "contribution",
     "accumulate",
     "backproject_plane",
+    "backproject_plane_batch",
     "backproject_one",
+    "backproject_batch",
     "validate_strip_opts",
     "reconstruct",
 ]
 
 STRATEGIES = ("scalar", "gather", "onehot", "strip", "strip2")
+
+# Projections folded into the volume per volume pass when the caller does
+# not say otherwise (untuned ``pbatch``).  Each pass streams the L^3
+# volume through memory exactly once, so volume traffic scales with
+# ``ceil(n_proj / pbatch)`` — see DESIGN.md §7 for the traffic model.
+DEFAULT_PBATCH = 4
 
 _EPS_W = 1e-6
 
@@ -355,17 +365,24 @@ def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
 # Part 3 — weighting + voxel update (streaming)
 # ----------------------------------------------------------------------
 
-def accumulate(plane, val, w, clip_mask=None):
-    """``VOL += val / w**2`` with the reciprocal already amortised.
+def contribution(val, w, clip_mask=None):
+    """``val / w**2``: one projection's additive contribution to a plane.
 
     ``w <= 0`` voxels (behind the source; impossible for sane geometries
-    but reachable in property-test sweeps) contribute zero.
+    but reachable in property-test sweeps) contribute zero.  Split out of
+    :func:`accumulate` so the batched plane update can sum several
+    projections' contributions before touching the plane once.
     """
     r = jnp.where(w > _EPS_W, 1.0 / w, 0.0)
     contrib = val * (r * r)
     if clip_mask is not None:
         contrib = contrib * clip_mask
-    return plane + contrib.astype(plane.dtype)
+    return contrib
+
+
+def accumulate(plane, val, w, clip_mask=None):
+    """``VOL += val / w**2`` with the reciprocal already amortised."""
+    return plane + contribution(val, w, clip_mask).astype(plane.dtype)
 
 
 # ----------------------------------------------------------------------
@@ -398,6 +415,29 @@ def backproject_plane(plane, image, padded, A, gs: GeomStatic, z,
     return accumulate(plane, val, w, clip_mask)
 
 
+def backproject_plane_batch(plane, images, padded, mats, gs: GeomStatic, z,
+                            strategy: str = "strip2", clip_mask=None,
+                            **opts):
+    """Back-project a *batch* of projections into one z-plane.
+
+    The inverted loop nest (DESIGN.md §7): the plane is read once,
+    receives the summed contribution of every projection in the batch
+    (Part 1 vmapped over the batch), and is written once — volume
+    traffic per reconstruction drops from ``2·n_proj·L³`` to
+    ``2·ceil(n_proj/pbatch)·L³`` elements.  Summation order per voxel is
+    projection-major within the batch, so results match the sequential
+    path to fp32 rounding, not bit-for-bit.
+    """
+
+    def one(image, pimg, A):
+        ix, iy, w = plane_coords(A, gs, z)
+        val = _sample(strategy, image, pimg, ix, iy, gs, opts)
+        return contribution(val, w, clip_mask)
+
+    contribs = jax.vmap(one)(images, padded, mats)
+    return plane + jnp.sum(contribs, axis=0).astype(plane.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("gs", "strategy", "opts_tuple"))
 def _backproject_one_jit(volume, image, A, gs, strategy, opts_tuple):
     opts = dict(opts_tuple)
@@ -419,6 +459,93 @@ def backproject_one(volume, image, A, geom: Geometry | GeomStatic,
     return _backproject_one_jit(volume, jnp.asarray(image),
                                 jnp.asarray(A, jnp.float32), gs, strategy,
                                 tuple(sorted(opts.items())))
+
+
+def _backproject_batch_body(volume, images, mats, gs: GeomStatic, strategy,
+                            opts_tuple, z0):
+    """Volume-resident update for one projection batch (plane-major).
+
+    ``volume`` may be a z-slab: the plane loop runs over
+    ``volume.shape[0]`` and ``z0`` is the slab's first global z index
+    (traced; the sharded pipeline passes its rank offset).  Callers jit.
+    """
+    opts = dict(opts_tuple)
+    padded = jax.vmap(_pad_image)(images)
+
+    def body(zi, vol):
+        plane = jax.lax.dynamic_index_in_dim(vol, zi, axis=0, keepdims=False)
+        plane = backproject_plane_batch(plane, images, padded, mats, gs,
+                                        z0 + zi, strategy, **opts)
+        return jax.lax.dynamic_update_index_in_dim(vol, plane, zi, axis=0)
+
+    return jax.lax.fori_loop(0, volume.shape[0], body, volume)
+
+
+def _stream_batches(projections, matrices, volume, pbatch: int, call):
+    """Fold the projection stack into ``volume``, ``pbatch`` at a time.
+
+    The one batch-chunking driver every batched backend shares (jnp here,
+    the Pallas wrapper in ``kernels/backproject_ops.py``): full batches
+    run under a ``fori_loop`` (one static batch shape), and a ``pbatch ∤
+    n_proj`` remainder runs as one final smaller batch — shapes are
+    static because ``n_proj`` is known at trace time.  ``call(vol, imgs,
+    mats)`` performs one volume pass for one batch.
+    """
+    n_proj = projections.shape[0]
+    pbatch = max(1, min(int(pbatch), n_proj)) if n_proj else 1
+    n_full = n_proj // pbatch
+
+    def body(b, vol):
+        imgs = jax.lax.dynamic_slice_in_dim(projections, b * pbatch, pbatch)
+        mats = jax.lax.dynamic_slice_in_dim(matrices, b * pbatch, pbatch)
+        return call(vol, imgs, mats)
+
+    if n_full:
+        volume = jax.lax.fori_loop(0, n_full, body, volume)
+    if n_proj - n_full * pbatch:
+        volume = call(volume, projections[n_full * pbatch:],
+                      matrices[n_full * pbatch:])
+    return volume
+
+
+def _reconstruct_batched(projections, matrices, volume, gs: GeomStatic,
+                         strategy, opts_tuple, pbatch: int, z0):
+    """Stream all projections through ``volume``, ``pbatch`` at a time.
+
+    The inverted loop nest: batches outer, z-planes inner, projections
+    innermost (vmapped) — each batch streams the volume through memory
+    exactly once.
+    """
+    return _stream_batches(
+        projections, matrices, volume, pbatch,
+        lambda vol, imgs, mats: _backproject_batch_body(
+            vol, imgs, mats, gs, strategy, opts_tuple, z0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gs", "strategy", "opts_tuple",
+                                    "pbatch"))
+def _backproject_batch_jit(volume, images, mats, gs, strategy, opts_tuple,
+                           pbatch):
+    return _reconstruct_batched(images, mats, volume, gs, strategy,
+                                opts_tuple, pbatch, jnp.int32(0))
+
+
+def backproject_batch(volume, images, mats, geom: Geometry | GeomStatic,
+                      strategy: str = "strip2",
+                      pbatch: int = DEFAULT_PBATCH, **opts):
+    """Add a stack of projections to ``volume``, ``pbatch`` per pass.
+
+    The batched analogue of :func:`backproject_one`: ``images`` is
+    ``(n_proj, n_v, n_u)``, ``mats`` ``(n_proj, 3, 4)``.  Unlike
+    :func:`reconstruct` this does not validate strip windows — callers
+    timing raw kernels (the tuner sweep) validate once themselves.
+    """
+    gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
+    return _backproject_batch_jit(volume, jnp.asarray(images),
+                                  jnp.asarray(mats, jnp.float32), gs,
+                                  strategy, tuple(sorted(opts.items())),
+                                  int(pbatch))
 
 
 # Memo of (geometry, strategy, window, matrices) combinations already
@@ -482,25 +609,29 @@ def validate_strip_opts(geom: Geometry, matrices, strategy: str,
     _VALIDATED_STRIPS.add(key)
 
 
-@functools.partial(jax.jit, static_argnames=("gs", "strategy", "opts_tuple"))
+@functools.partial(jax.jit,
+                   static_argnames=("gs", "strategy", "opts_tuple",
+                                    "pbatch"))
 def _reconstruct_jit(projections, matrices, volume, gs, strategy,
-                     opts_tuple):
-    def body(k, vol):
-        return _backproject_one_jit(vol, projections[k], matrices[k],
-                                    gs, strategy, opts_tuple)
-
-    return jax.lax.fori_loop(0, projections.shape[0], body, volume)
+                     opts_tuple, pbatch=DEFAULT_PBATCH):
+    return _reconstruct_batched(projections, matrices, volume, gs,
+                                strategy, opts_tuple, pbatch,
+                                jnp.int32(0))
 
 
 def reconstruct(projections, matrices, geom: Geometry,
-                strategy: str = "strip2", volume=None, **opts):
+                strategy: str = "strip2", volume=None,
+                pbatch: int | None = None, **opts):
     """Full reconstruction: stream every projection into the volume.
 
     ``projections`` are the *filtered* images ``(n_proj, n_v, n_u)``;
     ``matrices`` the stacked ``(n_proj, 3, 4)`` RabbitCT matrices.  The
-    projection loop is a ``fori_loop`` so the compiled graph is one HLO
-    regardless of ``n_proj`` (the distribution layer shards this loop —
-    see :mod:`repro.core.pipeline`).
+    loop nest is batch-major (DESIGN.md §7): projections are folded into
+    the volume ``pbatch`` at a time, so the volume streams through
+    memory ``ceil(n_proj / pbatch)`` times instead of ``n_proj`` times.
+    ``pbatch=None`` takes the autotuned value for this key when present
+    and :data:`DEFAULT_PBATCH` otherwise; ``pbatch=1`` recovers the
+    per-projection nest.
 
     ``strategy="auto"`` consults the autotuner cache
     (:mod:`repro.tune`) for the best strategy measured on this
@@ -510,18 +641,22 @@ def reconstruct(projections, matrices, geom: Geometry,
     (see :func:`validate_strip_opts`).
 
     The jitted body is a module-level function with ``(gs, strategy,
-    opts_tuple)`` static, so repeated calls with one problem hit one
-    compile-cache entry (``_reconstruct_jit._cache_size()``).
+    opts_tuple, pbatch)`` static, so repeated calls with one problem hit
+    one compile-cache entry (``_reconstruct_jit._cache_size()``).
     """
     gs = GeomStatic.of(geom)
     if strategy == "auto":
         from repro.tune.cache import resolve_strategy
 
         strategy, opts = resolve_strategy(gs, opts)
+    if pbatch is None:
+        pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
+    else:
+        opts.pop("pbatch", None)
     validate_strip_opts(geom, matrices, strategy, opts)
     projections = jnp.asarray(projections)
     matrices = jnp.asarray(matrices, jnp.float32)
     if volume is None:
         volume = jnp.zeros((gs.L, gs.L, gs.L), dtype=jnp.float32)
     return _reconstruct_jit(projections, matrices, volume, gs, strategy,
-                            tuple(sorted(opts.items())))
+                            tuple(sorted(opts.items())), int(pbatch))

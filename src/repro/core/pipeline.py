@@ -16,6 +16,12 @@ projection-sharded axis — ``(L^3 / data_shards) * 4`` bytes, the quantity
 the roofline term in ``benchmarks/fig2_scaling.py`` is built from.
 Projection images are small (4.8 MB at RabbitCT scale) and stay local to
 their rank; nothing else moves.
+
+Each rank's slab update runs the batch-major loop nest of
+:func:`repro.core.backproject._reconstruct_batched` (DESIGN.md §7): the
+local slab streams through memory ``ceil(n_proj_local / pbatch)`` times
+instead of ``n_proj_local`` times — the same P× traffic cut as the
+single-device path, per rank, on top of the psum structure.
 """
 
 from __future__ import annotations
@@ -29,27 +35,26 @@ from jax.sharding import Mesh
 from repro.dist.sharding import (ShardingRules, logical_to_spec,
                                  shard_constraint, sharding_context)
 
-from .backproject import GeomStatic, _backproject_one_jit, validate_strip_opts
+from .backproject import (DEFAULT_PBATCH, GeomStatic, _reconstruct_batched,
+                          validate_strip_opts)
 from .geometry import Geometry
 
 __all__ = ["sharded_reconstruct", "reconstruct_shards"]
 
 
 def reconstruct_shards(local_projs, local_mats, gs: GeomStatic,
-                       strategy: str, opts_tuple, local_volume):
+                       strategy: str, opts_tuple, local_volume,
+                       pbatch: int = DEFAULT_PBATCH):
     """Per-rank body: back-project the local projection subset."""
-
-    def body(k, vol):
-        return _backproject_one_jit(vol, local_projs[k], local_mats[k],
-                                    gs, strategy, opts_tuple)
-
-    return jax.lax.fori_loop(0, local_projs.shape[0], body, local_volume)
+    return _reconstruct_batched(local_projs, local_mats, local_volume, gs,
+                                strategy, opts_tuple, pbatch, jnp.int32(0))
 
 
 def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
                         strategy: str = "strip2",
                         volume_axis: str = "data",
                         proj_axes: tuple[str, ...] = ("model",),
+                        pbatch: int | None = None,
                         **opts):
     """Reconstruct on a device mesh.
 
@@ -59,15 +64,21 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     sharding ``P(volume_axis)`` on z.
 
     ``strategy="auto"`` resolves through the autotuner cache exactly like
-    :func:`repro.core.backproject.reconstruct` — resolution happens here,
-    host-side, before the ``shard_map`` closure is built, so every rank
-    runs one identical strategy.
+    :func:`repro.core.backproject.reconstruct` — resolution (including
+    the tuned ``pbatch``) happens here, host-side, before the
+    ``shard_map`` closure is built, so every rank runs one identical
+    strategy and batch size.
     """
     gs = GeomStatic.of(geom)
     if strategy == "auto":
         from repro.tune.cache import resolve_strategy
 
         strategy, opts = resolve_strategy(gs, opts)
+    if pbatch is None:
+        pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
+    else:
+        opts.pop("pbatch", None)
+    pbatch = int(pbatch)
     validate_strip_opts(geom, matrices, strategy, opts)
     opts_tuple = tuple(sorted(opts.items()))
     proj_shards = 1
@@ -103,7 +114,7 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
         local_volume = jax.lax.pcast(local_volume, tuple(proj_axes),
                                      to="varying")
         partial = _reconstruct_slab(local_projs, local_mats, gs, strategy,
-                                    opts_tuple, local_volume, z0)
+                                    opts_tuple, local_volume, z0, pbatch)
         # Sum the projection-sharded partial volumes.
         for ax in proj_axes:
             partial = jax.lax.psum(partial, ax)
@@ -124,23 +135,12 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
 
 
 def _reconstruct_slab(local_projs, local_mats, gs, strategy, opts_tuple,
-                      slab, z0):
-    """Back-project a projection subset into a z-slab starting at ``z0``."""
-    from .backproject import _pad_image, backproject_plane
+                      slab, z0, pbatch=DEFAULT_PBATCH):
+    """Back-project a projection subset into a z-slab starting at ``z0``.
 
-    opts = dict(opts_tuple)
-
-    def proj_body(k, vol):
-        image = local_projs[k]
-        A = local_mats[k]
-        padded = _pad_image(image)
-
-        def plane_body(zi, v):
-            plane = jax.lax.dynamic_index_in_dim(v, zi, 0, keepdims=False)
-            plane = backproject_plane(plane, image, padded, A, gs, z0 + zi,
-                                      strategy, **opts)
-            return jax.lax.dynamic_update_index_in_dim(v, plane, zi, 0)
-
-        return jax.lax.fori_loop(0, vol.shape[0], plane_body, vol)
-
-    return jax.lax.fori_loop(0, local_projs.shape[0], proj_body, slab)
+    Batch-major: the slab streams once per ``pbatch`` projections.  Same
+    helper as the single-device ``reconstruct`` path, so a 1×1 mesh is
+    bit-for-bit the single-device computation.
+    """
+    return _reconstruct_batched(local_projs, local_mats, slab, gs, strategy,
+                                opts_tuple, pbatch, z0)

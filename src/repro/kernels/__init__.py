@@ -5,6 +5,9 @@ explicit BlockSpec/VMEM tiling, a jit'd ops wrapper, and a pure-jnp
 oracle (``*_ref``).
 """
 
-from .backproject_ops import pallas_backproject_one  # noqa: F401
+from .backproject_ops import (  # noqa: F401
+    pallas_backproject_batch,
+    pallas_backproject_one,
+)
 from .gather_kernel_ops import pallas_onehot_gather  # noqa: F401
 from .slstm_ops import fused_slstm_forward  # noqa: F401

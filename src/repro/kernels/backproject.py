@@ -44,40 +44,137 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["backproject_kernel", "backproject_volume_pallas"]
+__all__ = ["backproject_kernel", "backproject_kernel_batch",
+           "backproject_volume_pallas", "backproject_volume_pallas_batch"]
 
 _EPS_W = 1e-6
 
 
-def _part1_tile(A_ref, o_mm, z, y0, x0, ty, chunk):
-    """Part 1 on the VPU: ICS coords for a (ty, chunk) voxel tile."""
+def _read_A(A_ref, p=None):
+    """Load a 3x4 projection matrix from SMEM as a nested scalar tuple.
+
+    ``p`` indexes a stacked ``(P, 3, 4)`` matrix buffer (batch kernel;
+    ``p`` may be a traced loop index — SMEM scalar loads take dynamic
+    indices).  Scalars instead of a reloaded array so every kernel
+    variant shares one Part-1 implementation.
+    """
+    if p is None:
+        return tuple(tuple(A_ref[i, j] for j in range(4)) for i in range(3))
+    return tuple(tuple(A_ref[p, i, j] for j in range(4)) for i in range(3))
+
+
+def _part1_tile(A, o_mm, z, y0, x0, ty, chunk):
+    """Part 1 on the VPU: ICS coords for a (ty, chunk) voxel tile.
+
+    ``A`` is the nested scalar tuple from :func:`_read_A`.
+    """
     O, MM = o_mm
     ys = (y0 + jax.lax.broadcasted_iota(jnp.float32, (ty, chunk), 0))
     xs = (x0 + jax.lax.broadcasted_iota(jnp.float32, (ty, chunk), 1))
     wx = O + xs * MM
     wy = O + ys * MM
     wz = O + z.astype(jnp.float32) * MM
-    u = wx * A_ref[0, 0] + wy * A_ref[0, 1] + wz * A_ref[0, 2] + A_ref[0, 3]
-    v = wx * A_ref[1, 0] + wy * A_ref[1, 1] + wz * A_ref[1, 2] + A_ref[1, 3]
-    w = wx * A_ref[2, 0] + wy * A_ref[2, 1] + wz * A_ref[2, 2] + A_ref[2, 3]
+    u = wx * A[0][0] + wy * A[0][1] + wz * A[0][2] + A[0][3]
+    v = wx * A[1][0] + wy * A[1][1] + wz * A[1][2] + A[1][3]
+    w = wx * A[2][0] + wy * A[2][1] + wz * A[2][2] + A[2][3]
     r = jnp.where(w > _EPS_W, 1.0 / w, 0.0)   # reciprocal trick (paper 5.1)
     return u * r, v * r, w, r
 
 
-def _tile_geometry(A_ref, o_mm, z, y0, x0, *, n_u, n_v, ty, chunk, band,
+def _strip_origin(A, o_mm, z, y0, x0, *, n_u, n_v, ty, chunk, band, width,
+                  pad_rows, pad_cols):
+    """Strip origin for a (ty, chunk) tile from its four *corner* voxels.
+
+    The cheap origin-only geometry: ``w`` is affine over the tile, so its
+    minimum sits at a corner, and where ``w > 0`` both detector
+    coordinates are monotone along each voxel axis — the tile extremes of
+    ``ix``/``iy`` are corner values.  Twelve scalar FMAs per corner
+    replace the full ``(ty, chunk)`` Part-1 pass the double-buffered
+    kernel used to run just to obtain a prefetch address.  Matches the
+    full-tile ``min`` exactly whenever ``w > eps`` across the tile (every
+    sane cone-beam geometry); prefetch and compute always agree because
+    both sides call this one helper.
+    """
+    O, MM = o_mm
+    wz = O + z.astype(jnp.float32) * MM
+    r_lo = c_lo = None
+    for dy in (0.0, float(ty - 1)):
+        for dx in (0.0, float(chunk - 1)):
+            wy = O + (y0 + dy) * MM
+            wx = O + (x0 + dx) * MM
+            u = wx * A[0][0] + wy * A[0][1] + wz * A[0][2] + A[0][3]
+            v = wx * A[1][0] + wy * A[1][1] + wz * A[1][2] + A[1][3]
+            w = wx * A[2][0] + wy * A[2][1] + wz * A[2][2] + A[2][3]
+            r = jnp.where(w > _EPS_W, 1.0 / w, 0.0)
+            ix = jnp.clip(u * r, -1.0, jnp.float32(n_u))
+            iy = jnp.clip(v * r, -1.0, jnp.float32(n_v))
+            c_lo = ix if c_lo is None else jnp.minimum(c_lo, ix)
+            r_lo = iy if r_lo is None else jnp.minimum(r_lo, iy)
+    r0 = jnp.clip(jnp.floor(r_lo).astype(jnp.int32), 0, pad_rows - band)
+    c0 = jnp.clip(jnp.floor(c_lo).astype(jnp.int32), 0, pad_cols - width)
+    return r0, c0
+
+
+def _tile_geometry(A, o_mm, z, y0, x0, *, n_u, n_v, ty, chunk, band,
                    width, pad_rows, pad_cols):
     """Part 1 + strip origin + activity flag for one (ty, chunk) tile."""
-    ix, iy, w, r = _part1_tile(A_ref, o_mm, z, y0, x0, ty, chunk)
+    ix, iy, w, r = _part1_tile(A, o_mm, z, y0, x0, ty, chunk)
     ix_c = jnp.clip(ix, -1.0, jnp.float32(n_u))
     iy_c = jnp.clip(iy, -1.0, jnp.float32(n_v))
     r0 = jnp.clip(jnp.floor(jnp.min(iy_c)).astype(jnp.int32),
                   0, pad_rows - band)
     c0 = jnp.clip(jnp.floor(jnp.min(ix_c)).astype(jnp.int32),
                   0, pad_cols - width)
-    active = ((jnp.min(ix) < jnp.float32(n_u)) & (jnp.max(ix) > -1.0)
-              & (jnp.min(iy) < jnp.float32(n_v)) & (jnp.max(iy) > -1.0)
-              & (jnp.max(w) > _EPS_W))
+    active = _tile_active(ix, iy, w, n_u, n_v)
     return ix, iy, w, r, r0, c0, active
+
+
+def _tile_active(ix, iy, w, n_u, n_v):
+    """Does any voxel of the tile project onto the detector?"""
+    return ((jnp.min(ix) < jnp.float32(n_u)) & (jnp.max(ix) > -1.0)
+            & (jnp.min(iy) < jnp.float32(n_v)) & (jnp.max(iy) > -1.0)
+            & (jnp.max(w) > _EPS_W))
+
+
+def _tile_contrib(get_strip, ix, iy, r, r0, c0, *, ty, chunk, band, width):
+    """Parts 2+3 for one tile against a resident (band, width) strip.
+
+    Banded one-hot vertical interpolation on the MXU, 2-tap horizontal
+    blend on the VPU, ``1/w²`` weighting folded in.  Taps outside the
+    strip select all-zero one-hot rows and vanish — with the zero border
+    this is the exact zero-outside-detector semantics.  Returns the f32
+    ``(ty, chunk)`` contribution.
+
+    ``get_strip`` is a zero-arg callable (wait on the strip DMA, read the
+    scratch) invoked only once the one-hot selectors are built, so the
+    copy overlaps the selector arithmetic.
+    """
+    fx = jnp.floor(ix)
+    fy = jnp.floor(iy)
+    sx = ix - fx
+    sy = iy - fy
+    # Padded-relative tap coordinates (+1: pad offset).
+    rel_r = fy.astype(jnp.int32) + 1 - r0
+    rel_c = fx.astype(jnp.int32) + 1 - c0
+
+    p = ty * chunk
+    rel_r_f = rel_r.reshape(p, 1)
+    rel_c_f = rel_c.reshape(p, 1)
+    sy_f = sy.reshape(p, 1)
+    sx_f = sx.reshape(p, 1)
+
+    biota = jax.lax.broadcasted_iota(jnp.int32, (p, band), 1)
+    wiota = jax.lax.broadcasted_iota(jnp.int32, (p, width), 1)
+    rowsel = ((biota == rel_r_f).astype(jnp.float32) * (1.0 - sy_f)
+              + (biota == rel_r_f + 1).astype(jnp.float32) * sy_f)
+    colsel = ((wiota == rel_c_f).astype(jnp.float32) * (1.0 - sx_f)
+              + (wiota == rel_c_f + 1).astype(jnp.float32) * sx_f)
+    # MXU: vertical interpolation for the whole tile at once.
+    rowmix = jax.lax.dot_general(
+        rowsel, get_strip().astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (p, width)
+    val = jnp.sum(rowmix * colsel, axis=1)                 # VPU 2-tap blend
+    return val.reshape(ty, chunk) * (r * r)
 
 
 def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
@@ -95,8 +192,8 @@ def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
 
     ix, iy, w, r, r0, c0, active = _tile_geometry(
-        A_ref, o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty, chunk=chunk,
-        band=band, width=width, pad_rows=img_ref.shape[0],
+        _read_A(A_ref), o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty,
+        chunk=chunk, band=band, width=width, pad_rows=img_ref.shape[0],
         pad_cols=img_ref.shape[1])
 
     @pl.when(active)
@@ -106,39 +203,15 @@ def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
             img_ref.at[pl.ds(r0, band), pl.ds(c0, width)], strip_ref, sem)
         copy.start()
 
-        fx = jnp.floor(ix)
-        fy = jnp.floor(iy)
-        sx = ix - fx
-        sy = iy - fy
-        # Padded-relative tap coordinates (+1: pad offset).
-        rel_r = fy.astype(jnp.int32) + 1 - r0
-        rel_c = fx.astype(jnp.int32) + 1 - c0
+        def strip():
+            copy.wait()
+            return strip_ref[...]
 
-        p = ty * chunk
-        rel_r_f = rel_r.reshape(p, 1)
-        rel_c_f = rel_c.reshape(p, 1)
-        sy_f = sy.reshape(p, 1)
-        sx_f = sx.reshape(p, 1)
-
-        biota = jax.lax.broadcasted_iota(jnp.int32, (p, band), 1)
-        wiota = jax.lax.broadcasted_iota(jnp.int32, (p, width), 1)
-        rowsel = ((biota == rel_r_f).astype(jnp.float32) * (1.0 - sy_f)
-                  + (biota == rel_r_f + 1).astype(jnp.float32) * sy_f)
-        colsel = ((wiota == rel_c_f).astype(jnp.float32) * (1.0 - sx_f)
-                  + (wiota == rel_c_f + 1).astype(jnp.float32) * sx_f)
-
-        copy.wait()
-        strip = strip_ref[...].astype(jnp.float32)
-        # MXU: vertical interpolation for the whole tile at once.
-        rowmix = jax.lax.dot_general(
-            rowsel, strip, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)            # (p, width)
-        val = jnp.sum(rowmix * colsel, axis=1)             # VPU 2-tap blend
-
+        contrib = _tile_contrib(strip, ix, iy, r, r0, c0,
+                                ty=ty, chunk=chunk, band=band, width=width)
         # --- Part 3: inverse-square-law weighted accumulate -------------
-        contrib = (val.reshape(ty, chunk) * (r * r)).astype(
-            vol_in_ref.dtype)
-        vol_out_ref[...] = vol_in_ref[...] + contrib[None]
+        vol_out_ref[...] = vol_in_ref[...] + contrib.astype(
+            vol_in_ref.dtype)[None]
 
     @pl.when(jnp.logical_not(active))
     def _():
@@ -167,8 +240,8 @@ def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
 
     ix, iy, w, r, r0, c0, active = _tile_geometry(
-        A_ref, o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty, chunk=chunk,
-        band=band, width=width, pad_rows=img_ref.shape[0],
+        _read_A(A_ref), o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty,
+        chunk=chunk, band=band, width=width, pad_rows=img_ref.shape[0],
         pad_cols=img_ref.shape[1])
 
     @pl.when(active)
@@ -249,6 +322,12 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
     next tile's DMA can be launched exactly one step ahead into the
     other half of a (2, band, width) scratch — compute and DMA overlap
     with zero extra instructions on the critical path.
+
+    Both the prefetch *and* this step's own strip address come from the
+    corner-based :func:`_strip_origin` (the full Part-1 pass previously
+    rerun per prefetch computed ``ix/iy/w/r`` for the whole next tile
+    just to floor two minima), so producer and consumer agree by
+    construction.
     """
     nz, ny, nc = grid_dims
     z = pl.program_id(0)
@@ -259,10 +338,11 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
 
     pad_rows = img_ref.shape[0]
     pad_cols = img_ref.shape[1]
+    A = _read_A(A_ref)
 
-    def tile(zi, yi, ci):
-        return _tile_geometry(
-            A_ref, o_mm, zi, (yi * ty).astype(jnp.float32),
+    def origin(zi, yi, ci):
+        return _strip_origin(
+            A, o_mm, zi, (yi * ty).astype(jnp.float32),
             (ci * chunk).astype(jnp.float32), n_u=n_u, n_v=n_v, ty=ty,
             chunk=chunk, band=band, width=width, pad_rows=pad_rows,
             pad_cols=pad_cols)
@@ -272,7 +352,10 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
             img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
             strip_ref.at[s], sems.at[s]).start()
 
-    ix, iy, w, r, r0, c0, active = tile(z, yb, cb)
+    ix, iy, w, r = _part1_tile(A, o_mm, z, (yb * ty).astype(jnp.float32),
+                               (cb * chunk).astype(jnp.float32), ty, chunk)
+    active = _tile_active(ix, iy, w, n_u, n_v)
+    r0, c0 = origin(z, yb, cb)
 
     # First step primes its own slot.
     @pl.when(step == 0)
@@ -289,54 +372,127 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
         rest = jax.lax.div(nxt, nc)
         yn = jax.lax.rem(rest, ny)
         zn = jax.lax.div(rest, ny)
-        _, _, _, _, r0n, c0n, _ = tile(zn, yn, cn)
+        r0n, c0n = origin(zn, yn, cn)
         start_dma(r0n, c0n, 1 - slot)
 
-    @pl.when(active)
-    def _():
+    def wait_strip():
         pltpu.make_async_copy(
             img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
             strip_ref.at[slot], sems.at[slot]).wait()
-        fx = jnp.floor(ix)
-        fy = jnp.floor(iy)
-        sx = ix - fx
-        sy = iy - fy
-        rel_r = fy.astype(jnp.int32) + 1 - r0
-        rel_c = fx.astype(jnp.int32) + 1 - c0
-        p = ty * chunk
-        biota = jax.lax.broadcasted_iota(jnp.int32, (p, band), 1)
-        wiota = jax.lax.broadcasted_iota(jnp.int32, (p, width), 1)
-        rowsel = ((biota == rel_r.reshape(p, 1)).astype(jnp.float32)
-                  * (1.0 - sy.reshape(p, 1))
-                  + (biota == rel_r.reshape(p, 1) + 1).astype(jnp.float32)
-                  * sy.reshape(p, 1))
-        colsel = ((wiota == rel_c.reshape(p, 1)).astype(jnp.float32)
-                  * (1.0 - sx.reshape(p, 1))
-                  + (wiota == rel_c.reshape(p, 1) + 1).astype(jnp.float32)
-                  * sx.reshape(p, 1))
-        strip = strip_ref[slot].astype(jnp.float32)
-        rowmix = jax.lax.dot_general(
-            rowsel, strip, (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        val = jnp.sum(rowmix * colsel, axis=1)
-        contrib = (val.reshape(ty, chunk) * (r * r)).astype(
-            vol_in_ref.dtype)
-        vol_out_ref[...] = vol_in_ref[...] + contrib[None]
+
+    @pl.when(active)
+    def _():
+        def strip():
+            wait_strip()
+            return strip_ref[slot]
+
+        contrib = _tile_contrib(strip, ix, iy, r, r0, c0,
+                                ty=ty, chunk=chunk, band=band, width=width)
+        vol_out_ref[...] = vol_in_ref[...] + contrib.astype(
+            vol_in_ref.dtype)[None]
 
     @pl.when(jnp.logical_not(active))
     def _():
         # The prefetched strip for this inactive tile must still be
         # consumed so the semaphore balances.
-        pltpu.make_async_copy(
-            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
-            strip_ref.at[slot], sems.at[slot]).wait()
+        wait_strip()
         vol_out_ref[...] = vol_in_ref[...]
+
+
+def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
+                             strip_ref, acc_ref, sems,
+                             *, o_mm, n_u, n_v, ty, chunk, band, width,
+                             pbatch):
+    """Projection-batched grid step: the ``(1, ty, chunk)`` volume tile
+    stays resident in VMEM while an in-kernel ``fori_loop`` folds in
+    ``pbatch`` projections — the inverted loop nest (DESIGN.md §7).
+
+    Refs: ``A_ref`` stacked ``(pbatch, 3, 4)`` f32 in SMEM; ``imgs_ref``
+    stacked zero-padded projections ``(pbatch, rows, cols)`` in ANY/HBM;
+    ``vol_in/out`` aliased volume tile; ``strip_ref`` ``(2, band,
+    width)`` VMEM scratch; ``acc_ref`` ``(ty, chunk)`` f32 accumulator;
+    ``sems`` 2 DMA semaphores.
+
+    The volume tile is loaded once and stored once per ``pbatch``
+    projections — volume HBM traffic drops by the batch factor versus
+    the per-projection kernels.  The per-projection strip DMAs are
+    double-buffered *across the projection loop*: projection ``p+1``'s
+    strip (address from the corner-based :func:`_strip_origin`) is in
+    flight while ``p``'s contribution computes — the CT-3 trick applied
+    where it pays most.  Every projection's strip is DMA'd and waited
+    unconditionally (clamped origins are always in-bounds) so the
+    semaphores balance; off-detector projections contribute zero through
+    the all-zero one-hot rows and the ``r²`` mask.
+    """
+    z = pl.program_id(0)
+    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
+    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
+    pad_rows = imgs_ref.shape[1]
+    pad_cols = imgs_ref.shape[2]
+
+    def origin(p):
+        return _strip_origin(
+            _read_A(A_ref, p), o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty,
+            chunk=chunk, band=band, width=width, pad_rows=pad_rows,
+            pad_cols=pad_cols)
+
+    def start_dma(p, r0, c0, slot):
+        pltpu.make_async_copy(
+            imgs_ref.at[p, pl.ds(r0, band), pl.ds(c0, width)],
+            strip_ref.at[slot], sems.at[slot]).start()
+
+    acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
+    r0_first, c0_first = origin(0)
+    start_dma(0, r0_first, c0_first, 0)
+
+    def body(p, carry):
+        r0, c0 = carry                 # projection p's strip (in flight)
+        slot = jax.lax.rem(p, 2)
+
+        # Prefetch projection p+1's strip into the other slot while p's
+        # contribution computes.  The clamped index keeps the SMEM read
+        # in-bounds on the last iteration; the DMA only starts when a
+        # next projection exists.
+        pn = jnp.minimum(p + 1, pbatch - 1)
+        r0n, c0n = origin(pn)
+
+        @pl.when(p + 1 < pbatch)
+        def _():
+            start_dma(pn, r0n, c0n, 1 - slot)
+
+        ix, iy, w, r = _part1_tile(_read_A(A_ref, p), o_mm, z, y0, x0,
+                                   ty, chunk)
+        active = _tile_active(ix, iy, w, n_u, n_v)
+
+        def wait_strip():
+            pltpu.make_async_copy(
+                imgs_ref.at[p, pl.ds(r0, band), pl.ds(c0, width)],
+                strip_ref.at[slot], sems.at[slot]).wait()
+
+        @pl.when(active)
+        def _():
+            def strip():
+                wait_strip()
+                return strip_ref[slot]
+
+            acc_ref[...] += _tile_contrib(
+                strip, ix, iy, r, r0, c0, ty=ty, chunk=chunk, band=band,
+                width=width)
+
+        @pl.when(jnp.logical_not(active))
+        def _():
+            wait_strip()               # balance the unconditional DMA
+
+        return (r0n, c0n)
+
+    jax.lax.fori_loop(0, pbatch, body, (r0_first, c0_first))
+    vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
 
 def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
                               ty=8, chunk=128, band=16, width=512,
                               double_buffer=False, micro=False,
-                              micro_group=8, micro_band=4,
+                              micro_group=8, micro_band=8,
                               micro_width=32, interpret=False):
     """``pallas_call`` wrapper: one projection into the whole volume.
 
@@ -345,6 +501,11 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
     slices always fit.  Returns the updated volume (input aliased).
     ``double_buffer=True`` selects the DMA-prefetching variant (CT-3);
     ``micro=True`` the per-group micro-window compute (CT-5).
+
+    (``micro_band`` used to default to 4 — the same silent tap-drop
+    hazard class PR 2 fixed for the jnp ``strip2`` ``gband``; 8 covers
+    every geometry in the repo's sweeps, and ops.py now validates the
+    micro window against the host planner.)
     """
     L = volume.shape[0]
     assert L % ty == 0 and L % chunk == 0
@@ -389,3 +550,47 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
         interpret=interpret,
         name=name,
     )(A, padded_img, volume)
+
+
+def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
+                                    n_u, n_v, ty=8, chunk=128, band=16,
+                                    width=512, interpret=False):
+    """``pallas_call`` wrapper: one *batch* of projections into the whole
+    volume, volume tile resident across the in-kernel projection loop.
+
+    ``padded_imgs``: stacked zero-padded projections ``(pbatch, rows,
+    cols)`` (rows/cols already rounded up by ops.py); ``A_stack``:
+    ``(pbatch, 3, 4)`` matrices.  Returns the updated volume (input
+    aliased).  Volume HBM traffic per call: one load + one store of
+    ``L³`` — a ``pbatch``× cut versus ``pbatch`` calls of
+    :func:`backproject_volume_pallas`.
+    """
+    L = volume.shape[0]
+    pbatch = int(A_stack.shape[0])
+    assert L % ty == 0 and L % chunk == 0
+    assert padded_imgs.shape[0] == pbatch
+    grid = (L, L // ty, L // chunk)
+
+    vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
+    kernel = functools.partial(
+        backproject_kernel_batch, o_mm=o_mm, n_u=n_u, n_v=n_v,
+        ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # A stack (P, 3, 4)
+            pl.BlockSpec(memory_space=pltpu.ANY),    # padded images (HBM)
+            vol_spec,                                # volume tile in
+        ],
+        out_specs=vol_spec,
+        out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, band, width), padded_imgs.dtype),
+            pltpu.VMEM((ty, chunk), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+        name=f"backproject_strip_batch_p{pbatch}",
+    )(A_stack, padded_imgs, volume)

@@ -11,19 +11,21 @@ static strip size against the host planner, and falling back to
 from __future__ import annotations
 
 import functools
+import hashlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backproject import GeomStatic
+from repro.core.backproject import DEFAULT_PBATCH, GeomStatic
 from repro.core.clipping import plan_strips
 from repro.core.geometry import Geometry
 
-from .backproject import backproject_volume_pallas
+from .backproject import (backproject_volume_pallas,
+                          backproject_volume_pallas_batch)
 
-__all__ = ["pallas_backproject_one", "validate_strip_config",
-           "clamp_tiles"]
+__all__ = ["pallas_backproject_one", "pallas_backproject_batch",
+           "validate_strip_config", "clamp_tiles"]
 
 
 def _on_tpu() -> bool:
@@ -62,7 +64,10 @@ def _pad_up(image, band: int, width: int):
 
 
 def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
-                          chunk: int, band: int, width: int) -> None:
+                          chunk: int, band: int, width: int,
+                          micro: bool = False, micro_group: int = 8,
+                          micro_band: int = 8,
+                          micro_width: int = 32) -> None:
     """Host-side check that (band, width) covers every tile footprint.
 
     A tile spans ``ty`` lines x ``chunk`` voxels; per-line strip needs are
@@ -70,6 +75,14 @@ def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
     lines' strips are merged by taking min/max origins.  Raises with the
     required sizes if the static config is too small — silent tap loss is
     never possible.
+
+    With ``micro=True`` the per-group ``(micro_band, micro_width)``
+    window is checked too: the micro kernel selects taps from a window
+    sliced out of the strip, and a window smaller than a group's tap
+    footprint drops taps exactly as silently as an undersized strip
+    (``micro_band`` defaulted to 4 until this check existed).  The
+    planner run with ``chunk=micro_group`` gives the exact per-group
+    footprint.
     """
     plan = plan_strips(geom, A, chunk=chunk)
     r0 = plan.r0.astype(np.int64)
@@ -87,26 +100,48 @@ def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
             f"strip config (band={band}, width={width}) does not cover the "
             f"tile footprint; need at least (band={need_band}, "
             f"width={need_width}) for ty={ty}, chunk={chunk}")
+    if micro:
+        if chunk % micro_group:
+            raise ValueError(
+                f"micro_group={micro_group} must divide chunk={chunk}")
+        gplan = plan_strips(geom, A, chunk=micro_group)
+        # A full-strip window can never lose a tap (its origin clamps
+        # into the strip), so the requirement saturates at the strip
+        # dimensions — mirrors validate_strip_opts' full-detector rule.
+        need_gb = min(gplan.required_band, band)
+        need_gw = min(gplan.required_width, width)
+        if micro_band < need_gb or micro_width < need_gw:
+            raise ValueError(
+                f"micro window (micro_band={micro_band}, "
+                f"micro_width={micro_width}) does not cover the "
+                f"{micro_group}-voxel group tap footprint; need at least "
+                f"(micro_band={need_gb}, micro_width={need_gw}) — "
+                f"undersized micro windows drop taps silently")
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("gs", "ty", "chunk", "band", "width",
-                     "double_buffer", "micro", "interpret"))
+                     "double_buffer", "micro", "micro_group", "micro_band",
+                     "micro_width", "interpret"))
 def _run(volume, image, A, gs: GeomStatic, ty, chunk, band, width,
-         double_buffer, micro, interpret):
+         double_buffer, micro, micro_group, micro_band, micro_width,
+         interpret):
     padded = _pad_up(image, band, width)
     return backproject_volume_pallas(
         volume, padded, A,
         o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
         ty=ty, chunk=chunk, band=band, width=width,
-        double_buffer=double_buffer, micro=micro, interpret=interpret)
+        double_buffer=double_buffer, micro=micro, micro_group=micro_group,
+        micro_band=micro_band, micro_width=micro_width,
+        interpret=interpret)
 
 
 def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
                            *, ty: int = 8, chunk: int = 128, band: int = 16,
                            width: int = 512, double_buffer: bool = False,
-                           micro: bool = False,
+                           micro: bool = False, micro_group: int = 8,
+                           micro_band: int = 8, micro_width: int = 32,
                            interpret: bool | None = None,
                            validate: bool = False,
                            strategy: str = "fixed"):
@@ -114,7 +149,9 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
 
     ``interpret=None`` auto-selects: compiled on TPU, interpreter
     elsewhere.  ``validate=True`` runs the host planner check first
-    (cheap; recommended once per geometry).  ``double_buffer=True``
+    (cheap; recommended once per geometry) — with ``micro=True`` it also
+    checks the ``(micro_band, micro_width)`` group window, the hazard
+    that made ``micro_band=4`` silently drop taps.  ``double_buffer=True``
     overlaps strip DMA with compute (hillclimb CT-3).
 
     ``strategy="auto"`` pulls the tile parameters (``ty``/``chunk``/
@@ -138,13 +175,117 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
         raise ValueError(
             f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
     ty, chunk, band, width = clamp_tiles(gs, ty, chunk, band, width)
+    micro_band = min(micro_band, band)
+    micro_width = min(micro_width, width)
     if validate:
         if isinstance(geom, GeomStatic):
             raise ValueError("validate=True needs the full Geometry")
         validate_strip_config(geom, np.asarray(A, np.float64), ty=ty,
-                              chunk=chunk, band=band, width=width)
+                              chunk=chunk, band=band, width=width,
+                              micro=micro, micro_group=micro_group,
+                              micro_band=micro_band,
+                              micro_width=micro_width)
     if interpret is None:
         interpret = not _on_tpu()
     return _run(jnp.asarray(volume), jnp.asarray(image),
                 jnp.asarray(A, jnp.float32), gs, ty, chunk, band, width,
-                double_buffer, micro, interpret)
+                double_buffer, micro, micro_group, micro_band, micro_width,
+                interpret)
+
+
+def _pad_up_stack(images, band: int, width: int):
+    """The stacked analogue of :func:`_pad_up`: pad the whole projection
+    stack once (1-pixel zero border + slice-safe round-up)."""
+    n_proj, n_v, n_u = images.shape
+    rows = max(band, n_v + 2)
+    rows += (-rows) % 8
+    cols = max(width, n_u + 2)
+    cols += (-cols) % 128
+    return jnp.pad(images, ((0, 0), (1, rows - n_v - 1),
+                            (1, cols - n_u - 1)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gs", "ty", "chunk", "band", "width", "pbatch",
+                     "interpret"))
+def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
+                 width, pbatch, interpret):
+    from repro.core.backproject import _stream_batches
+
+    padded = _pad_up_stack(images, band, width)
+
+    def call(vol, imgs, A):
+        return backproject_volume_pallas_batch(
+            vol, imgs, A, o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
+            ty=ty, chunk=chunk, band=band, width=width,
+            interpret=interpret)
+
+    return _stream_batches(padded, mats, volume, pbatch, call)
+
+
+# Projection stacks already proven covered by (geom, tile config) — the
+# planner pass is host-side numpy and paid once per distinct problem,
+# mirroring repro.core.backproject._VALIDATED_STRIPS.
+_VALIDATED_STACKS: set = set()
+
+
+def pallas_backproject_batch(volume, images, mats,
+                             geom: Geometry | GeomStatic, *, ty: int = 8,
+                             chunk: int = 128, band: int = 16,
+                             width: int = 512,
+                             pbatch: int = DEFAULT_PBATCH,
+                             interpret: bool | None = None,
+                             validate: bool = True,
+                             strategy: str = "fixed"):
+    """Add a stack of projections to ``volume``, ``pbatch`` per kernel
+    launch, with the volume tile resident in VMEM across the in-kernel
+    projection loop (DESIGN.md §7).
+
+    ``images``: unpadded ``(n_proj, n_v, n_u)`` filtered projections —
+    padded once for the whole stack; ``mats``: ``(n_proj, 3, 4)``.
+    ``n_proj`` is chunked into ``pbatch``-sized batches inside one jit
+    (a ``pbatch ∤ n_proj`` remainder runs as one final smaller batch).
+    Every projection's footprint is validated against the host planner
+    by default (memoised per problem); pass ``validate=False`` only when
+    the exact (geometry, matrices, tile) triple was already validated.
+
+    ``strategy="auto"`` pulls ``ty``/``chunk``/``band``/``width`` *and*
+    ``pbatch`` from the autotuner cache for this key.
+    """
+    gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
+    if strategy == "auto":
+        from repro.tune.cache import resolve_pallas_config
+
+        tuned = resolve_pallas_config(gs)
+        if tuned is not None:
+            ty = int(tuned.get("ty", ty))
+            chunk = int(tuned.get("chunk", chunk))
+            band = int(tuned.get("band", band))
+            width = int(tuned.get("width", width))
+            pbatch = int(tuned.get("pbatch", pbatch))
+    elif strategy != "fixed":
+        raise ValueError(
+            f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
+    ty, chunk, band, width = clamp_tiles(gs, ty, chunk, band, width)
+    images = jnp.asarray(images)
+    mats_f32 = jnp.asarray(mats, jnp.float32)
+    n_proj = int(images.shape[0])
+    pbatch = max(1, min(int(pbatch), n_proj)) if n_proj else 1
+    if validate:
+        if isinstance(geom, GeomStatic):
+            raise ValueError("validate=True needs the full Geometry")
+        mats64 = np.asarray(mats, np.float64).reshape(-1, 3, 4)
+        key = (gs, ty, chunk, band, width,
+               hashlib.sha1(mats64.tobytes()).hexdigest())
+        if key not in _VALIDATED_STACKS:
+            for A in mats64:
+                validate_strip_config(geom, A, ty=ty, chunk=chunk,
+                                      band=band, width=width)
+            if len(_VALIDATED_STACKS) >= 4096:
+                _VALIDATED_STACKS.clear()
+            _VALIDATED_STACKS.add(key)
+    if interpret is None:
+        interpret = not _on_tpu()
+    return _run_batched(jnp.asarray(volume), images, mats_f32, gs, ty,
+                        chunk, band, width, pbatch, interpret)

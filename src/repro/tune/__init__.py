@@ -5,18 +5,21 @@ chip; this package makes that comparison executable and its outcome
 persistent.  See DESIGN.md §6.
 """
 
-from .cache import (DEFAULT_STRATEGY, TunedConfig, autotune, cache_key,
+from .cache import (DEFAULT_STRATEGY, TUNE_SCHEMA_VERSION, TunedConfig,
+                    autotune, cache_key,
                     clear_memory_cache, device_identity, load_tuned,
                     resolve_pallas_config, resolve_strategy, store_tuned,
                     tune_dir)
-from .space import Candidate, default_space, jnp_candidates, pallas_candidates
+from .space import (Candidate, default_space, jnp_candidates,
+                    pallas_batch_fits_vmem, pallas_candidates)
 from .sweep import SweepResult, Timing, sweep_strategies
 from .timing import time_fn
 
 __all__ = [
-    "DEFAULT_STRATEGY", "TunedConfig", "autotune", "cache_key",
+    "DEFAULT_STRATEGY", "TUNE_SCHEMA_VERSION", "TunedConfig", "autotune", "cache_key",
     "clear_memory_cache", "device_identity", "load_tuned",
     "resolve_pallas_config", "resolve_strategy", "store_tuned", "tune_dir",
-    "Candidate", "default_space", "jnp_candidates", "pallas_candidates",
+    "Candidate", "default_space", "jnp_candidates",
+    "pallas_batch_fits_vmem", "pallas_candidates",
     "SweepResult", "Timing", "sweep_strategies", "time_fn",
 ]

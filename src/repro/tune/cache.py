@@ -26,7 +26,8 @@ import jax
 
 from repro.core.backproject import STRATEGIES, GeomStatic
 
-__all__ = ["TunedConfig", "DEFAULT_STRATEGY", "tune_dir", "cache_key",
+__all__ = ["TunedConfig", "DEFAULT_STRATEGY", "TUNE_SCHEMA_VERSION",
+           "tune_dir", "cache_key",
            "store_tuned", "load_tuned", "clear_memory_cache",
            "device_identity", "resolve_strategy", "resolve_pallas_config",
            "autotune"]
@@ -35,17 +36,28 @@ __all__ = ["TunedConfig", "DEFAULT_STRATEGY", "tune_dir", "cache_key",
 # hard-coded default.
 DEFAULT_STRATEGY = "strip2"
 
-_PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer", "micro")
+# Bumped whenever the persisted TunedConfig layout or the semantics of a
+# tuned decision change (v2: the ``pbatch`` axis — a v1 decision timed
+# the per-projection loop nest, which no longer exists).  ``load_tuned``
+# treats any other version as untuned, so stale ``.repro_tune/`` files
+# are *ignored*, never misread into the new dataclass.
+TUNE_SCHEMA_VERSION = 2
+
+_PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer", "micro",
+                "pbatch")
 
 # Options each jnp strategy actually accepts — caller options riding
 # along with strategy="auto" are filtered to the *resolved* strategy, so
 # a strip2-flavoured option can never reach e.g. sample_onehot(**opts).
+# ``pbatch`` is strategy-independent (the batch-major loop nest wraps
+# every strategy); ``reconstruct``/``sharded_reconstruct`` pop it before
+# options reach any ``sample_*``.
 _STRATEGY_KEYS = {
-    "scalar": (),
-    "gather": (),
-    "onehot": ("vox_block",),
-    "strip": ("chunk", "band", "width", "strips_per_block"),
-    "strip2": ("group", "gband", "gwidth", "groups_per_block"),
+    "scalar": ("pbatch",),
+    "gather": ("pbatch",),
+    "onehot": ("vox_block", "pbatch"),
+    "strip": ("chunk", "band", "width", "strips_per_block", "pbatch"),
+    "strip2": ("group", "gband", "gwidth", "groups_per_block", "pbatch"),
 }
 
 
@@ -54,13 +66,21 @@ class TunedConfig:
     """One cached decision plus the sweep evidence behind it."""
 
     strategy: str                   # best jnp strategy (in STRATEGIES)
-    opts: dict                      # its tile options
+    opts: dict                      # its tile options (incl. ``pbatch``)
     backend: str
     device_kind: str
-    us_per_call: float              # best jnp median time
+    us_per_call: float              # best jnp median time per projection
     pallas: dict | None = None      # best kernel config, when swept
     pallas_us: float | None = None
     timings: list = dataclasses.field(default_factory=list)
+    version: int = TUNE_SCHEMA_VERSION
+
+    @property
+    def pbatch(self) -> int:
+        """Projection batch depth of the winning jnp decision."""
+        from repro.core.backproject import DEFAULT_PBATCH
+
+        return int(self.opts.get("pbatch", DEFAULT_PBATCH))
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -126,6 +146,9 @@ def load_tuned(gs: GeomStatic, backend: str | None = None,
         return None
     try:
         data = json.loads(path.read_text())
+        if (not isinstance(data, dict)
+                or data.get("version") != TUNE_SCHEMA_VERSION):
+            return None             # stale schema: ignored, not misread
         cfg = TunedConfig(**data)
     except (json.JSONDecodeError, TypeError, ValueError):
         return None                 # corrupt cache file: treat as untuned
@@ -180,14 +203,14 @@ def resolve_pallas_config(gs: GeomStatic, *, backend: str | None = None,
 
 def autotune(geom, *, image=None, A=None, space=None,
              include_pallas: bool | None = None, warmup: int = 1,
-             iters: int = 3,
+             iters: int = 3, min_total_s: float | None = None,
              dirpath: str | os.PathLike | None = None) -> TunedConfig:
     """Sweep ``geom`` on the current backend and cache the winner."""
     from .sweep import sweep_strategies    # lazy: keeps cache import light
 
     res = sweep_strategies(geom, image=image, A=A, space=space,
                            include_pallas=include_pallas, warmup=warmup,
-                           iters=iters)
+                           iters=iters, min_total_s=min_total_s)
     best = res.best(STRATEGIES)
     if best is None:
         raise RuntimeError(

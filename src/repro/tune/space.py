@@ -2,10 +2,14 @@
 
 The paper's empirical question — which gather/interpolation scheme wins on
 a given chip — maps here to a compact grid over the five jnp strategies
-(DESIGN.md §2) plus the three Pallas kernel variants, each with the tile
+(DESIGN.md §2) plus the Pallas kernel variants, each with the tile
 parameters that govern its locality/width trade-off (``chunk``/``band``/
 ``width`` for strips, ``group``/``gband``/``gwidth`` for micro-windows,
-``ty``/``double_buffer``/``micro`` for the kernel).  The space is small by
+``ty``/``double_buffer``/``micro`` for the kernel).  Every family also
+spans the ``pbatch`` axis — how many projections fold into the volume per
+volume pass (DESIGN.md §7): the loop-nest inversion trades volume HBM
+traffic (÷pbatch) against working-set pressure, so the right depth is a
+chip property exactly like the gather scheme.  The space is small by
 design: the sweep runs at benchmark time on real hardware, and per
 Hofmann et al. the *ordering* shifts per microarchitecture, not the
 plausible-region boundaries.
@@ -18,7 +22,35 @@ from typing import NamedTuple
 from repro.core.backproject import GeomStatic
 
 __all__ = ["Candidate", "jnp_candidates", "pallas_candidates",
-           "default_space"]
+           "default_space", "pallas_batch_fits_vmem"]
+
+# Usable per-core VMEM budget for candidate screening.  Half the 16 MB
+# physical VMEM: the grid pipeline needs headroom for the in-flight
+# volume tiles and the compiler's own temporaries.
+_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+
+# pbatch depths proposed per candidate family (clamped to n_proj at
+# sweep/run time; 1 = the classical per-projection nest).
+_PBATCHES = (1, 4)
+
+
+def pallas_batch_fits_vmem(gs: GeomStatic, *, pbatch: int, ty: int,
+                           chunk: int, band: int, width: int,
+                           itemsize: int = 4) -> bool:
+    """Conservative VMEM budget check for a batched kernel candidate.
+
+    Counts every in-flight projection strip at full ``pbatch`` depth
+    (the double-buffered kernel holds 2, but a deeper pipeline or an
+    ANY-space promotion may keep more resident), the aliased volume tile
+    pair plus the f32 accumulator, and the one-hot selector temporaries
+    ``rowsel (ty·chunk, band)`` / ``colsel (ty·chunk, width)``.  A
+    candidate that fails here is never proposed — an OOM'd sweep point
+    would abort the whole tune run on device.
+    """
+    strips = pbatch * band * width * itemsize
+    tile = 3 * ty * chunk * 4
+    onehot = ty * chunk * (band + width) * 4
+    return strips + tile + onehot <= _VMEM_BUDGET_BYTES
 
 
 class Candidate(NamedTuple):
@@ -26,7 +58,9 @@ class Candidate(NamedTuple):
 
     ``strategy`` is one of ``repro.core.backproject.STRATEGIES`` or
     ``"pallas"``; ``opts`` is a sorted ``(key, value)`` tuple so candidates
-    are hashable and stable as cache-file keys.
+    are hashable and stable as cache-file keys.  ``opts`` may carry
+    ``pbatch`` — the projection batch depth, consumed by the batch-major
+    drivers rather than the ``sample_*`` kernels.
     """
 
     strategy: str
@@ -43,21 +77,35 @@ class Candidate(NamedTuple):
         txt = ",".join(f"{k}={v}" for k, v in self.opts)
         return f"{self.strategy}[{txt}]"
 
+    @property
+    def pbatch(self) -> int:
+        return int(dict(self.opts).get("pbatch", 1))
 
-def jnp_candidates(gs: GeomStatic) -> list[Candidate]:
-    """Candidate grid for the five jnp strategies, clamped to ``gs``."""
+
+def jnp_candidates(gs: GeomStatic,
+                   pbatches: tuple[int, ...] = _PBATCHES
+                   ) -> list[Candidate]:
+    """Candidate grid for the five jnp strategies, clamped to ``gs``.
+
+    The tile grid is crossed with the ``pbatch`` axis: the batched loop
+    nest changes the strategies' memory behaviour (volume traffic ÷
+    pbatch, ``pbatch`` detector images hot at once), so the winner must
+    be measured per depth, not assumed.
+    """
     L = gs.L
-    cands = [Candidate.of("scalar"), Candidate.of("gather")]
+    bases = [Candidate.of("scalar"), Candidate.of("gather")]
     for vb in (256, 512):
-        cands.append(Candidate.of("onehot", vox_block=min(vb, L * L)))
+        bases.append(Candidate.of("onehot", vox_block=min(vb, L * L)))
     for chunk, band, width in ((32, 16, 128), (64, 16, 256)):
-        cands.append(Candidate.of(
+        bases.append(Candidate.of(
             "strip", chunk=min(chunk, L), band=min(band, gs.n_v + 2),
             width=min(width, gs.n_u + 2)))
     for group, gband, gwidth in ((8, 8, 64), (8, 8, 32), (16, 8, 128)):
-        cands.append(Candidate.of(
+        bases.append(Candidate.of(
             "strip2", group=min(group, L), gband=min(gband, gs.n_v + 2),
             gwidth=min(gwidth, gs.n_u + 2)))
+    cands = [Candidate.of(b.strategy, **dict(b.opts), pbatch=pb)
+             for b in bases for pb in pbatches]
     # De-dup clamped collisions on tiny geometries.
     seen, out = set(), []
     for c in cands:
@@ -67,15 +115,22 @@ def jnp_candidates(gs: GeomStatic) -> list[Candidate]:
     return out
 
 
-def pallas_candidates(gs: GeomStatic) -> list[Candidate]:
-    """The three kernel variants (plain / double-buffer / micro) at a
-    geometry-clamped base tile."""
+def pallas_candidates(gs: GeomStatic,
+                      pbatches: tuple[int, ...] = _PBATCHES
+                      ) -> list[Candidate]:
+    """Kernel variants at a geometry-clamped base tile: plain /
+    double-buffer / micro per-projection, plus the projection-batched
+    kernel at every ``pbatch`` depth that fits the VMEM budget."""
     base = dict(ty=min(8, gs.L), chunk=min(32, gs.L), band=16, width=128)
-    return [
+    cands = [
         Candidate.of("pallas", **base),
         Candidate.of("pallas", double_buffer=True, **base),
         Candidate.of("pallas", micro=True, **base),
     ]
+    for pb in pbatches:
+        if pb > 1 and pallas_batch_fits_vmem(gs, pbatch=pb, **base):
+            cands.append(Candidate.of("pallas", pbatch=pb, **base))
+    return cands
 
 
 def default_space(gs: GeomStatic,

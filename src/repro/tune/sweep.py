@@ -1,12 +1,15 @@
 """Sweep driver: time every candidate strategy/config on this backend.
 
-The measurement mirrors ``benchmarks/fig1_single_device`` (one projection
+The measurement mirrors ``benchmarks/fig1_single_device`` (projections
 into an ``L^3`` volume, median of a few runs via :func:`timing.time_fn`)
-so tuned decisions and benchmark rows are directly comparable.  Candidates
-whose static windows cannot cover the geometry's tap footprint are
-*skipped with a recorded reason* rather than timed — a config the
-validator rejects would produce silently wrong voxels, and a tuner must
-never select one.
+so tuned decisions and benchmark rows are directly comparable.  A
+candidate carrying ``pbatch`` is timed through the batch-major drivers on
+a ``pbatch``-deep projection stack and normalised to **us per
+projection**, so depths compete on one scale with the classical
+per-projection nest.  Candidates whose static windows cannot cover the
+geometry's tap footprint are *skipped with a recorded reason* rather than
+timed — a config the validator rejects would produce silently wrong
+voxels, and a tuner must never select one.
 """
 
 from __future__ import annotations
@@ -17,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backproject import (STRATEGIES, GeomStatic, backproject_one,
+from repro.core.backproject import (STRATEGIES, GeomStatic,
+                                    backproject_batch, backproject_one,
                                     validate_strip_opts)
 from repro.core.geometry import Geometry, projection_matrices, \
     projection_matrix
@@ -31,7 +35,7 @@ __all__ = ["Timing", "SweepResult", "sweep_strategies"]
 
 @dataclasses.dataclass(frozen=True)
 class Timing:
-    """One measured sweep point."""
+    """One measured sweep point (``us_per_call`` = us per *projection*)."""
 
     label: str
     strategy: str
@@ -70,15 +74,31 @@ def _default_problem(geom: Geometry):
     return image, A
 
 
+def _batch_problem(geom: Geometry, image, pbatch: int):
+    """A ``pbatch``-deep stack around the mid-sweep angle: distinct
+    matrices (faithful strip-origin churn), one noise image replicated."""
+    k0 = max(0, geom.n_proj // 2 - pbatch // 2)
+    thetas = [float(geom.angles[min(k0 + i, geom.n_proj - 1)])
+              for i in range(pbatch)]
+    mats = jnp.asarray(np.stack([projection_matrix(geom, th)
+                                 for th in thetas]), jnp.float32)
+    images = jnp.broadcast_to(image, (pbatch,) + image.shape)
+    return images, mats
+
+
 def sweep_strategies(geom: Geometry, *, image=None, A=None,
                      space: list[Candidate] | None = None,
                      include_pallas: bool | None = None,
-                     warmup: int = 1, iters: int = 3) -> SweepResult:
+                     warmup: int = 1, iters: int = 3,
+                     min_total_s: float | None = None) -> SweepResult:
     """Time every valid candidate for ``geom`` on the current backend.
 
     ``include_pallas=None`` auto-selects: the kernel is timed only where
     it compiles (TPU) — interpreter-mode timings would be meaningless.
+    ``min_total_s`` overrides :func:`time_fn`'s adaptive floor (pass 0
+    to pin the sample count to ``iters`` exactly — cheap smoke sweeps).
     """
+    tkw = {} if min_total_s is None else {"min_total_s": min_total_s}
     gs = GeomStatic.of(geom)
     backend = jax.default_backend()
     if include_pallas is None:
@@ -99,24 +119,41 @@ def sweep_strategies(geom: Geometry, *, image=None, A=None,
     skipped: list[tuple[str, str]] = []
     for cand in space:
         opts = dict(cand.opts)
+        pbatch = max(1, int(opts.pop("pbatch", 1)))
         try:
             if cand.strategy in STRATEGIES:
                 validate_strip_opts(geom, mats_all, cand.strategy, opts)
-                t = time_fn(backproject_one, vol0, image, A, geom,
-                            strategy=cand.strategy, warmup=warmup,
-                            iters=iters, **opts)
+                if pbatch == 1:
+                    t = time_fn(backproject_one, vol0, image, A, geom,
+                                strategy=cand.strategy, warmup=warmup,
+                                iters=iters, **tkw, **opts)
+                else:
+                    images, mats = _batch_problem(geom, image, pbatch)
+                    t = time_fn(backproject_batch, vol0, images, mats,
+                                geom, strategy=cand.strategy,
+                                pbatch=pbatch, warmup=warmup,
+                                iters=iters, **tkw, **opts) / pbatch
             elif cand.strategy == "pallas":
                 from repro.kernels.backproject_ops import (
-                    clamp_tiles, pallas_backproject_one,
-                    validate_strip_config)
+                    clamp_tiles, pallas_backproject_batch,
+                    pallas_backproject_one, validate_strip_config)
                 ty, chunk, band, width = clamp_tiles(
                     gs, opts.get("ty", 8), opts.get("chunk", 128),
                     opts.get("band", 16), opts.get("width", 512))
                 for A_i in mats_all:
-                    validate_strip_config(geom, A_i, ty=ty, chunk=chunk,
-                                          band=band, width=width)
-                t = time_fn(pallas_backproject_one, vol0, image, A, geom,
-                            warmup=warmup, iters=iters, **opts)
+                    validate_strip_config(
+                        geom, A_i, ty=ty, chunk=chunk, band=band,
+                        width=width, micro=bool(opts.get("micro", False)))
+                if pbatch == 1:
+                    t = time_fn(pallas_backproject_one, vol0, image, A,
+                                geom, warmup=warmup, iters=iters, **tkw,
+                                **opts)
+                else:
+                    images, mats = _batch_problem(geom, image, pbatch)
+                    t = time_fn(pallas_backproject_batch, vol0, images,
+                                mats, geom, pbatch=pbatch, validate=False,
+                                warmup=warmup, iters=iters, **tkw,
+                                **opts) / pbatch
             else:
                 raise ValueError(f"unknown candidate strategy "
                                  f"{cand.strategy!r}")

@@ -3,6 +3,12 @@
 One implementation serves both the benchmark harness (``benchmarks/common``
 re-exports it) and the autotuner sweep driver, so a tuned decision and a
 benchmark row are always comparable numbers.
+
+The iteration count adapts to a minimum *total* measured time: a fixed
+``iters=5`` made µs-scale medians (tiny CPU shapes in BENCH_ct.json)
+timer-noise lotteries, while second-scale problems were already stable at
+a handful of iterations.  ``iters`` is the floor, ``min_total_s`` the
+target the loop keeps sampling toward, ``max_iters`` the runaway bound.
 """
 
 from __future__ import annotations
@@ -15,15 +21,27 @@ import numpy as np
 __all__ = ["time_fn"]
 
 
-def time_fn(fn, *args, warmup: int = 2, iters: int = 5, **kw):
-    """Median wall time (seconds) of jitted ``fn``; blocks on results."""
+def time_fn(fn, *args, warmup: int = 2, iters: int = 5,
+            min_total_s: float = 0.05, max_iters: int = 1000, **kw):
+    """Median wall time (seconds) of jitted ``fn``; blocks on results.
+
+    Runs at least ``iters`` timed calls, then keeps sampling until the
+    accumulated measurement time reaches ``min_total_s`` (or
+    ``max_iters`` calls), so fast calls get enough samples for a stable
+    median and slow calls pay no extra iterations.  ``min_total_s=0``
+    restores the fixed-count behaviour.
+    """
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
     times = []
-    for _ in range(iters):
+    total = 0.0
+    while len(times) < iters or (total < min_total_s
+                                 and len(times) < max_iters):
         t0 = time.perf_counter()
         out = fn(*args, **kw)
         jax.block_until_ready(out)
-        times.append(time.perf_counter() - t0)
+        dt = time.perf_counter() - t0
+        times.append(dt)
+        total += dt
     return float(np.median(times))

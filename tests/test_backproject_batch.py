@@ -1,0 +1,212 @@
+"""Projection-batched (volume-resident) back projection vs the
+sequential scalar oracle.
+
+The loop-nest inversion (DESIGN.md §7) must not change semantics: for
+every strategy, every ``pbatch`` — including ``pbatch ∤ n_proj``
+remainders and border-ray geometries — the batched reconstruction
+matches the sequential scalar-oracle reconstruction to fp32 rounding
+(≤1e-5).  Accumulation order *within* a batch differs by construction
+(contributions sum before the plane update), which is exactly what the
+tolerance is for.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Geometry, filter_projections, reconstruct
+from repro.core.backproject import (DEFAULT_PBATCH, STRATEGIES, GeomStatic,
+                                    backproject_batch, backproject_one)
+from repro.core.geometry import projection_matrix, projection_matrices
+from repro.core.phantom import make_dataset
+from repro.kernels.backproject_ops import pallas_backproject_batch
+from repro.kernels.backproject_ref import backproject_volume_ref
+
+GEOM = Geometry().scaled(16, n_proj=5)           # 5: prime vs pbatch 2, 3
+GS = GeomStatic.of(GEOM)
+
+
+@pytest.fixture(scope="module")
+def ct_case():
+    projs, mats, _ = make_dataset(GEOM)
+    filt = np.asarray(filter_projections(projs, GEOM))
+    return filt, np.asarray(mats, np.float32)
+
+
+@pytest.fixture(scope="module")
+def scalar_sequential(ct_case):
+    filt, mats = ct_case
+    return np.asarray(reconstruct(filt, mats, GEOM, strategy="scalar",
+                                  pbatch=1))
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+@pytest.mark.parametrize("pbatch", [2, 3])       # both 5 % pbatch != 0
+def test_batched_matches_sequential_oracle(ct_case, scalar_sequential,
+                                           strategy, pbatch):
+    filt, mats = ct_case
+    out = np.asarray(reconstruct(filt, mats, GEOM, strategy=strategy,
+                                 pbatch=pbatch))
+    np.testing.assert_allclose(out, scalar_sequential, rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("pbatch", [1, 4, 5, 7])
+def test_batch_depth_sweep_strip2(ct_case, scalar_sequential, pbatch):
+    """Depth sweep for the default strategy: exact divisor (5), clamp
+    past n_proj (7), divisor-with-remainder (4), sequential (1)."""
+    filt, mats = ct_case
+    out = np.asarray(reconstruct(filt, mats, GEOM, strategy="strip2",
+                                 pbatch=pbatch))
+    np.testing.assert_allclose(out, scalar_sequential, rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_batched_border_rays():
+    """Geometry whose rays straddle the detector edge: the batched path
+    must blend edge taps with implicit zeros exactly like the
+    sequential scalar oracle (n_proj=5, pbatch=2 remainder)."""
+    geom = Geometry().scaled(16, n_proj=5, n_u=24, n_v=18)
+    rng = np.random.default_rng(3)
+    imgs = rng.standard_normal(
+        (geom.n_proj, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = np.asarray(projection_matrices(geom), np.float32)
+    ref = np.asarray(reconstruct(imgs, mats, geom, strategy="scalar",
+                                 pbatch=1))
+    assert (ref == 0.0).any() and (ref != 0.0).any()
+    for strategy in ("scalar", "gather", "strip2"):
+        out = np.asarray(reconstruct(imgs, mats, geom, strategy=strategy,
+                                     pbatch=2))
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_backproject_batch_accumulates_onto_volume(ct_case):
+    """backproject_batch adds onto a non-zero volume like repeated
+    backproject_one calls."""
+    filt, mats = ct_case
+    rng = np.random.default_rng(11)
+    vol0 = jnp.asarray(rng.standard_normal((16, 16, 16)), jnp.float32)
+    seq = vol0
+    for k in range(3):
+        seq = backproject_one(seq, filt[k], mats[k], GEOM,
+                              strategy="gather")
+    out = backproject_batch(vol0, filt[:3], mats[:3], GEOM,
+                            strategy="gather", pbatch=3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(seq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_sharded_batched_matches_single_device(ct_case):
+    """Explicit pbatch threads through the shard_map slab path bit-for-
+    bit on a 1x1 mesh (same batched helper, same depth)."""
+    from repro.core.pipeline import sharded_reconstruct
+    from repro.launch.mesh import make_local_mesh
+
+    filt, mats = ct_case
+    mesh = make_local_mesh(data=1, model=1)
+    out = np.asarray(sharded_reconstruct(filt, mats, GEOM, mesh,
+                                         strategy="gather", pbatch=3))
+    single = np.asarray(reconstruct(filt, mats, GEOM, strategy="gather",
+                                    pbatch=3))
+    np.testing.assert_array_equal(out, single)
+
+
+def test_tuned_pbatch_resolves_through_auto(ct_case, tmp_path, monkeypatch):
+    """A tuned decision carrying ``pbatch`` redirects auto bitwise."""
+    from repro.tune import (TunedConfig, clear_memory_cache,
+                            device_identity, store_tuned)
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    filt, mats = ct_case
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="gather", opts={"pbatch": 3},
+                      backend=backend, device_kind=device_kind,
+                      us_per_call=1.0)
+    store_tuned(GS, cfg)
+    assert cfg.pbatch == 3
+    a = np.asarray(reconstruct(filt, mats, GEOM, strategy="auto"))
+    b = np.asarray(reconstruct(filt, mats, GEOM, strategy="gather",
+                               pbatch=3))
+    clear_memory_cache()
+    np.testing.assert_array_equal(a, b)
+
+
+# ----------------------------------------------------------------------
+# Pallas batch kernel (interpret mode on CPU)
+# ----------------------------------------------------------------------
+
+def _pallas_ref(filt, mats, n):
+    vol = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    for k in range(n):
+        vol = backproject_volume_ref(vol, filt[k], mats[k], GS)
+    return np.asarray(vol)
+
+
+@pytest.mark.parametrize("pbatch", [1, 2, 3, 5])
+def test_pallas_batch_matches_ref(ct_case, pbatch):
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    out = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4, chunk=16,
+                                   band=16, width=128, pbatch=pbatch)
+    np.testing.assert_allclose(np.asarray(out), _pallas_ref(filt, mats, 5),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_batch_border_rays():
+    """Kernel-path zero-outside semantics across an in-kernel projection
+    loop with a pbatch remainder."""
+    geom = Geometry().scaled(16, n_proj=8, n_u=24, n_v=18)
+    rng = np.random.default_rng(3)
+    imgs = rng.standard_normal((3, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = np.stack([projection_matrix(geom, th)
+                     for th in (0.7, 1.1, 2.9)]).astype(np.float32)
+    vol0 = jnp.zeros((geom.L,) * 3, jnp.float32)
+    ref = vol0
+    for k in range(3):
+        ref = backproject_one(ref, imgs[k], mats[k], geom,
+                              strategy="scalar")
+    out = pallas_backproject_batch(vol0, imgs, mats, geom, ty=8, chunk=16,
+                                   band=16, width=128, pbatch=2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(ref) == 0.0).any() and (np.asarray(ref) != 0.0).any()
+
+
+def test_pallas_batch_validates_stack(ct_case):
+    """Undersized strips are rejected for *every* projection of the
+    stack before any device work."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    with pytest.raises(ValueError, match="does not cover"):
+        pallas_backproject_batch(vol0, filt, mats, GEOM, ty=16, chunk=16,
+                                 band=8, width=128, pbatch=2)
+
+
+def test_pallas_batch_auto_uses_tuned_pbatch(ct_case, tmp_path,
+                                             monkeypatch):
+    from repro.tune import (TunedConfig, clear_memory_cache,
+                            device_identity, store_tuned)
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="strip2", opts={}, backend=backend,
+                      device_kind=device_kind, us_per_call=1.0,
+                      pallas={"ty": 4, "chunk": 16, "band": 16,
+                              "width": 128, "pbatch": 2})
+    store_tuned(GS, cfg)
+    out_auto = pallas_backproject_batch(vol0, filt, mats, GEOM,
+                                        strategy="auto")
+    out_fix = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4,
+                                       chunk=16, band=16, width=128,
+                                       pbatch=2)
+    clear_memory_cache()
+    np.testing.assert_array_equal(np.asarray(out_auto),
+                                  np.asarray(out_fix))
+
+
+def test_default_pbatch_is_sane():
+    assert DEFAULT_PBATCH >= 1

@@ -29,6 +29,16 @@ def test_known_only_name_is_accepted():
     # MODULES must clear the check; we don't execute it here).
     names = [n for n, _ in bench_run.MODULES]
     assert "fig1_single_device" in names
+    assert "table5_traffic" in names
+
+
+def test_only_comma_list_rejects_any_bad_name(capsys):
+    """CI passes a comma-separated --only; one bad name fails the whole
+    invocation with the module list, same as the single-name case."""
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main(["--only", "fig1_single_device,not_a_module"])
+    assert exc.value.code == 2
+    assert "unknown module" in capsys.readouterr().err
 
 
 def test_json_trajectory_from_tiny_fig1(tmp_path, monkeypatch):
@@ -57,6 +67,18 @@ def test_json_trajectory_from_tiny_fig1(tmp_path, monkeypatch):
     assert tuned["strategy"] in STRATEGIES
     assert rows["fig1/auto"]["fields"]["chosen"] == tuned["strategy"]
     assert len(tuned["timings"]) >= 5
+    # The decision carries the pbatch axis and the current schema
+    # version (acceptance: tuned config includes pbatch).
+    assert tuned["opts"].get("pbatch", 0) >= 1
+    from repro.tune import TUNE_SCHEMA_VERSION
+    assert tuned["version"] == TUNE_SCHEMA_VERSION
+    # The batched loop nest is benchmarked at several *effective*
+    # depths (requested depths clamp to the tiny n_proj).
+    batch_rows = [r for n, r in rows.items()
+                  if n.startswith("fig1/batch/p")]
+    assert len(batch_rows) >= 2
+    assert all(r["us_per_call"] > 0 for r in batch_rows)
+    assert any(r["fields"]["pbatch"] > 1 for r in batch_rows)
 
     # Second run appends a trajectory entry with *fresh* rows (main()
     # resets the collection state, so nothing from run 1 replays).
@@ -64,3 +86,116 @@ def test_json_trajectory_from_tiny_fig1(tmp_path, monkeypatch):
     doc = json.loads(path.read_text())
     assert len(doc["runs"]) == 2
     assert len(doc["runs"][1]["rows"]) == len(run0["rows"])
+
+
+def test_table5_traffic_models_pbatch_reduction(tmp_path, monkeypatch):
+    """table5 commits the volume-traffic model: the chosen-pbatch row's
+    modelled bytes are the sequential bytes divided by the chosen
+    depth (acceptance criterion)."""
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    monkeypatch.setattr(common, "TINY", True)
+    path = tmp_path / "bench.json"
+    bench_run.main(["--only", "fig1_single_device,table5_traffic",
+                    "--json", str(path)])
+    run0 = json.loads(path.read_text())["runs"][0]
+    assert run0["meta"]["failures"] == 0
+    assert run0["meta"]["modules"] == ["fig1_single_device",
+                                      "table5_traffic"]
+
+    traffic = run0["extras"]["table5_traffic"]
+    chosen = traffic["chosen_pbatch"]
+    assert chosen >= 1
+    from benchmarks.table5_traffic import volume_bytes
+
+    L, n_proj = traffic["L"], traffic["n_proj"]
+    assert traffic["volume_bytes_seq"] == volume_bytes(L, n_proj, 1)
+    assert traffic["volume_bytes_chosen"] == volume_bytes(L, n_proj,
+                                                          chosen)
+    rows = {r["name"]: r for r in run0["rows"]}
+    row = rows["table5/chosen"]
+    assert row["fields"]["pbatch"] == chosen
+    assert row["fields"]["vol_reduction"] == pytest.approx(
+        traffic["volume_bytes_seq"] / traffic["volume_bytes_chosen"])
+
+
+# ----------------------------------------------------------------------
+# Regression gate (benchmarks/check_regression.py)
+# ----------------------------------------------------------------------
+
+def _traj(path, us_by_name, backend="cpu", device_kind="cpu", tiny=True):
+    entry = {
+        "timestamp": "2026-01-01T00:00:00Z",
+        "meta": {"backend": backend, "device_kind": device_kind,
+                 "tiny": tiny, "failures": 0, "modules": []},
+        "rows": [{"name": n, "us_per_call": us, "derived": "",
+                  "fields": {}} for n, us in us_by_name.items()],
+        "extras": {},
+    }
+    import pathlib
+    p = pathlib.Path(path)
+    doc = {"runs": []}
+    if p.is_file():
+        doc = json.loads(p.read_text())
+    doc["runs"].append(entry)
+    p.write_text(json.dumps(doc))
+
+
+def test_regression_gate_passes_within_threshold(tmp_path):
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/gather": 1000.0})
+    _traj(fresh, {"fig1/gather": 2500.0})     # 2.5x < 4x: noise budget
+    check_regression.main(["--baseline", str(base), "--fresh", str(fresh),
+                           "--threshold", "4.0", "--min-us", "200"])
+
+
+def test_regression_gate_fails_past_threshold(tmp_path, capsys):
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/gather": 1000.0, "fig1/strip2": 500.0})
+    _traj(fresh, {"fig1/gather": 5000.0, "fig1/strip2": 600.0})
+    with pytest.raises(SystemExit) as exc:
+        check_regression.main(["--baseline", str(base), "--fresh",
+                               str(fresh), "--threshold", "4.0",
+                               "--min-us", "200"])
+    assert exc.value.code == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION fig1/gather" in out
+    assert "fig1/strip2" not in out.replace("compared", "")
+
+
+def test_regression_gate_skips_noise_rows_and_compares_latest(tmp_path):
+    """µs-scale rows below --min-us never fail the gate, and the
+    baseline is the *latest* committed entry for the identity."""
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/gather": 50.0})        # old slow entry
+    _traj(base, {"fig1/gather": 10.0})        # latest entry: 10us
+    _traj(fresh, {"fig1/gather": 1000.0})     # 100x but below min-us
+    check_regression.main(["--baseline", str(base), "--fresh", str(fresh),
+                           "--threshold", "4.0", "--min-us", "200"])
+
+
+def test_regression_gate_vacuous_without_matching_identity(tmp_path,
+                                                           capsys):
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/gather": 1000.0}, device_kind="TPU v5e")
+    _traj(fresh, {"fig1/gather": 99999.0})
+    check_regression.main(["--baseline", str(base), "--fresh", str(fresh)])
+    assert "vacuously" in capsys.readouterr().out
+
+
+def test_regression_gate_rejects_empty_fresh(tmp_path):
+    from benchmarks import check_regression
+
+    fresh = tmp_path / "fresh.json"
+    with pytest.raises(SystemExit) as exc:
+        check_regression.main(["--baseline", str(tmp_path / "b.json"),
+                               "--fresh", str(fresh)])
+    assert exc.value.code == 2

@@ -119,6 +119,52 @@ def test_validate_rejects_undersized_strips():
                               ty=32, chunk=32, band=8, width=128)
 
 
+def test_micro_window_is_loud_or_correct():
+    """The micro variant's tap-drop hazard (the ``micro_band=4`` default,
+    same bug class as jnp strip2's old ``gband=4``): at L=48 the per-
+    group footprint outgrows a 4-row window, so an undersized micro
+    window must raise loudly at validation — and the bumped default must
+    validate *and* match the scalar oracle."""
+    from repro.core.backproject import backproject_one
+    from repro.core.geometry import projection_matrix
+
+    geom = Geometry().scaled(48, n_proj=4)
+    rng = np.random.default_rng(7)
+    image = jnp.asarray(rng.standard_normal((geom.n_v, geom.n_u)),
+                        jnp.float32)
+    A = jnp.asarray(projection_matrix(geom, 2.9), jnp.float32)
+    A64 = np.asarray(A, np.float64)
+
+    # Strip itself is large enough; the micro window is the problem.
+    validate_strip_config(geom, A64, ty=8, chunk=48, band=32, width=256)
+    with pytest.raises(ValueError, match="micro window"):
+        validate_strip_config(geom, A64, ty=8, chunk=48, band=32,
+                              width=256, micro=True, micro_band=4)
+    with pytest.raises(ValueError, match="micro window"):
+        pallas_backproject_one(
+            jnp.zeros((48,) * 3, jnp.float32), image, A, geom, ty=8,
+            chunk=48, band=32, width=256, micro=True, micro_band=4,
+            validate=True)
+
+    # Default micro window (8) validates and matches the oracle.
+    vol0 = jnp.zeros((48,) * 3, jnp.float32)
+    ref = np.asarray(backproject_one(vol0, image, A, geom,
+                                     strategy="scalar"))
+    assert np.abs(ref).max() > 0
+    out = np.asarray(pallas_backproject_one(
+        vol0, image, A, geom, ty=8, chunk=48, band=32, width=256,
+        micro=True, validate=True))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_micro_group_must_divide_chunk():
+    geom, filt, mats = _problem(32)
+    with pytest.raises(ValueError, match="must divide"):
+        validate_strip_config(geom, np.asarray(mats[0], np.float64),
+                              ty=8, chunk=32, band=16, width=128,
+                              micro=True, micro_group=12)
+
+
 def test_gather_kernel_sweep():
     """One-hot gather kernel vs oracle across shapes/dtypes."""
     import jax

@@ -101,6 +101,52 @@ def test_sweep_skips_undersized_windows():
     assert "does not cover" in res.skipped[0][1]
 
 
+def test_stale_schema_versions_are_ignored(tmp_path):
+    """A ``.repro_tune/`` file from an older schema (no ``version``, or a
+    mismatched one) must be treated as untuned — never misread into the
+    new dataclass (a v1 decision timed a loop nest that no longer
+    exists)."""
+    import os
+    from pathlib import Path
+
+    from repro.tune import TUNE_SCHEMA_VERSION, cache_key, load_tuned
+
+    d = Path(os.environ["REPRO_TUNE_DIR"])
+    d.mkdir(parents=True, exist_ok=True)
+    backend, device_kind = device_identity()
+    key = cache_key(GS, backend, device_kind)
+
+    # v1-era file: no version field at all.
+    v1 = {"strategy": "gather", "opts": {}, "backend": backend,
+          "device_kind": device_kind, "us_per_call": 1.0}
+    (d / f"{key}.json").write_text(json.dumps(v1))
+    assert load_tuned(GS) is None
+
+    # Future/mismatched version.
+    v1["version"] = TUNE_SCHEMA_VERSION + 1
+    (d / f"{key}.json").write_text(json.dumps(v1))
+    clear_memory_cache()
+    assert load_tuned(GS) is None
+
+    # Current version loads.
+    v1["version"] = TUNE_SCHEMA_VERSION
+    (d / f"{key}.json").write_text(json.dumps(v1))
+    clear_memory_cache()
+    cfg = load_tuned(GS)
+    assert cfg is not None and cfg.strategy == "gather"
+
+
+def test_autotune_persists_current_version_and_pbatch():
+    cfg = autotune(GEOM, include_pallas=False, warmup=0, iters=1)
+    from repro.tune import TUNE_SCHEMA_VERSION
+
+    assert cfg.version == TUNE_SCHEMA_VERSION
+    # Every jnp candidate carries the pbatch axis now; the winner's
+    # depth is what reconstruct(strategy="auto") will run.
+    assert "pbatch" in cfg.opts and cfg.pbatch >= 1
+    assert any(t["opts"].get("pbatch", 1) > 1 for t in cfg.timings)
+
+
 def test_cache_file_is_json_keyed_on_device(tmp_path, monkeypatch):
     import jax
     cfg = autotune(GEOM, include_pallas=False, warmup=0, iters=1)
