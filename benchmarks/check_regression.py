@@ -58,21 +58,28 @@ def _rows(run: dict) -> dict[str, float]:
 
 
 def compare(baseline_run: dict, fresh_run: dict, *, threshold: float,
-            min_us: float) -> tuple[list[tuple[str, float, float]], int]:
-    """Return (regressions, n_compared); a regression is
-    ``(row name, baseline us, fresh us)``."""
+            min_us: float
+            ) -> tuple[list[tuple[str, float, float]], int, list[str]]:
+    """Return (regressions, n_compared, missing); a regression is
+    ``(row name, baseline us, fresh us)``, ``missing`` the baseline rows
+    above ``min_us`` that the fresh run did not emit at all (a crashed
+    benchmark module drops its rows — that must not read as a pass)."""
     base = _rows(baseline_run)
     fresh = _rows(fresh_run)
     regressions = []
+    missing = []
     n = 0
     for name, base_us in sorted(base.items()):
+        if base_us < min_us:
+            continue
         fresh_us = fresh.get(name)
-        if fresh_us is None or base_us < min_us:
+        if fresh_us is None:
+            missing.append(name)
             continue
         n += 1
         if fresh_us > threshold * base_us:
             regressions.append((name, base_us, fresh_us))
-    return regressions, n
+    return regressions, n, missing
 
 
 def main(argv=None) -> None:
@@ -106,15 +113,26 @@ def main(argv=None) -> None:
         return
     baseline_run = candidates[-1]
 
-    regressions, n = compare(baseline_run, fresh_run,
-                             threshold=args.threshold, min_us=args.min_us)
+    regressions, n, missing = compare(baseline_run, fresh_run,
+                                      threshold=args.threshold,
+                                      min_us=args.min_us)
     print(f"# compared {n} row(s) against baseline "
           f"{baseline_run.get('timestamp', '?')} (threshold "
           f"{args.threshold}x, min {args.min_us}us)")
+    for name in missing:
+        print(f"MISSING {name}: baseline row above {args.min_us}us not "
+              f"emitted by the fresh run")
     for name, base_us, fresh_us in regressions:
         print(f"REGRESSION {name}: {base_us:.1f}us -> {fresh_us:.1f}us "
               f"({fresh_us / base_us:.2f}x)")
     if regressions:
+        raise SystemExit(1)
+    if n == 0 and missing:
+        # The fresh run dropped every comparable baseline row (a crashed
+        # benchmark module emits nothing) — that is a gate failure, not
+        # a vacuous pass.
+        print(f"# zero rows compared; {len(missing)} baseline row(s) "
+              f"missing from the fresh run", file=sys.stderr)
         raise SystemExit(1)
     print("# no regressions")
 

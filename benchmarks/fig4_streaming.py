@@ -1,0 +1,85 @@
+"""Streamed reconstruction latency/throughput (beyond-paper figure).
+
+The paper's C-arm delivers projections as a stream; what a clinic feels
+is (a) **time-to-first-volume** — wall time from first arriving chunk to
+the finished volume when filtering and back projection overlap the
+arrival, and (b) **projections/s** sustained when B scans reconstruct
+concurrently on one device (the streaming engine's continuous batching,
+DESIGN.md §8).
+
+Rows:
+
+* ``fig4/ttfv/b1`` — one scan streamed chunk-by-chunk through a fresh
+  engine; ``us_per_call`` is the full stream-to-volume latency.
+* ``fig4/stream/b{B}`` — B interleaved scans, round-robin chunk
+  arrival; derived ``projps`` counts every folded projection.
+
+The engine's jitted filter/fold steps are module-level, so the warmup
+run compiles once and every measured engine instance reuses the trace —
+the numbers are steady-state serving, not compile time.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Geometry
+from repro.core.phantom import make_dataset
+from repro.streaming import ReconstructionEngine
+
+from .common import bench_size, emit, record_extra, time_fn
+
+BATCHES = (1, 4, 8)
+
+
+def _stream(geom, projs, mats, *, n_scans: int, chunk: int,
+            pbatch: int) -> None:
+    """Run ``n_scans`` concurrent streamed reconstructions to completion."""
+    n_proj = projs.shape[0]
+    eng = ReconstructionEngine(geom, n_slots=min(n_scans, 4),
+                               pbatch=pbatch)
+    sids = [eng.begin_scan(n_proj=n_proj) for _ in range(n_scans)]
+    # Round-robin arrival: chunk c of every scan lands before chunk c+1
+    # of any scan — the C-arm-per-room traffic shape.
+    for c0 in range(0, n_proj, chunk):
+        sel = slice(c0, min(c0 + chunk, n_proj))
+        idx = np.arange(sel.start, sel.stop)
+        for sid in sids:
+            eng.submit(sid, projs[sel], mats[sel], idx)
+    eng.drain()
+    vols = [eng.result(sid) for sid in sids]
+    vols[-1].block_until_ready()
+    return None
+
+
+def run(L: int | None = None):
+    L = bench_size(48, 12) if L is None else L
+    n_proj = bench_size(32, 8)
+    chunk = bench_size(4, 2)
+    pbatch = 4
+    geom = Geometry().scaled(L, n_proj=n_proj)
+    projs, mats, _ = make_dataset(geom)
+    projs = np.asarray(projs, np.float32)
+
+    # Time-to-first-volume: one scan, chunks in arrival order, filter
+    # overlapping fold — the latency a streamed caller observes.
+    t = time_fn(_stream, geom, projs, mats, n_scans=1, chunk=chunk,
+                pbatch=pbatch, warmup=1, iters=2)
+    emit("fig4/ttfv/b1", t * 1e6,
+         f"projps={n_proj / t:.1f} L={L} nproj={n_proj} chunk={chunk} "
+         f"pbatch={pbatch}")
+
+    for B in BATCHES:
+        t = time_fn(_stream, geom, projs, mats, n_scans=B, chunk=chunk,
+                    pbatch=pbatch, warmup=1, iters=2)
+        emit(f"fig4/stream/b{B}", t * 1e6,
+             f"projps={B * n_proj / t:.1f} L={L} nproj={n_proj} "
+             f"chunk={chunk} pbatch={pbatch} scans={B}")
+
+    record_extra("fig4_streaming", {
+        "L": L, "n_proj": n_proj, "chunk": chunk, "pbatch": pbatch,
+        "batches": list(BATCHES)})
+
+
+if __name__ == "__main__":
+    run()

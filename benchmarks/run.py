@@ -12,6 +12,8 @@ table5_traffic              beyond-paper: volume-HBM-traffic model vs time
 fig1_single_device          Fig. 1 (single-core strategy comparison)
 fig2_scaling                Fig. 2 (full-system scaling)
 fig3_codegen                Fig. 3 (compiler vs hand-structured)
+fig4_streaming              beyond-paper: streamed-engine time-to-first-
+                            volume + projections/s at B concurrent scans
 cycle_model                 Section 6.4 (per-iteration cycle breakdown)
 quality                     RabbitCT accuracy score (PSNR)
 lm_gather                   the technique on the assigned LM archs
@@ -39,8 +41,8 @@ import jax
 
 from . import common
 from . import (ct_hillclimb, cycle_model, fig1_single_device,
-               fig2_scaling, fig3_codegen, lm_gather, moe_dispatch,
-               quality, table2_op_census, table3_efficiency,
+               fig2_scaling, fig3_codegen, fig4_streaming, lm_gather,
+               moe_dispatch, quality, table2_op_census, table3_efficiency,
                table4_gather_micro, table5_traffic)
 
 MODULES = [
@@ -51,6 +53,7 @@ MODULES = [
     ("table5_traffic", table5_traffic),
     ("fig2_scaling", fig2_scaling),
     ("fig3_codegen", fig3_codegen),
+    ("fig4_streaming", fig4_streaming),
     ("cycle_model", cycle_model),
     ("quality", quality),
     ("lm_gather", lm_gather),
@@ -110,8 +113,10 @@ def main(argv=None) -> None:
             print(f"unknown module {missing}; valid modules: "
                   f"{', '.join(names)}", file=sys.stderr)
             raise SystemExit(2)
-    if args.tiny:
-        common.TINY = True
+    # Assign, don't latch: a prior in-process main(["--tiny"]) must not
+    # leak tiny shapes into a later full-size run (RESULTS/EXTRAS were
+    # already reset per invocation; TINY was not).
+    common.TINY = bool(args.tiny) or common.TINY_ENV
     # Fresh collection state per invocation: a second in-process main()
     # (tests, notebooks) must not replay the previous run's rows/extras
     # into its --json trajectory entry.

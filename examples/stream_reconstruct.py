@@ -1,0 +1,81 @@
+"""Streamed reconstruction demo: serve scans the way a C-arm delivers them.
+
+Simulates B concurrent acquisitions whose projections arrive as
+interleaved, shuffled chunks — the engine filters each chunk on device
+the moment it arrives (Parker weights selected by explicit angle index,
+never by arrival position) and folds it into that scan's resident volume
+``pbatch`` projections per pass.  Prints per-scan time-to-volume and the
+PSNR of every result against the analytic phantom.
+
+    PYTHONPATH=src python examples/stream_reconstruct.py --L 32 --proj 32 \
+        --scans 3 --slots 2 --chunk 4 --shuffle
+"""
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import Geometry, quality_report
+from repro.core.phantom import make_dataset
+from repro.streaming import ReconstructionEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--L", type=int, default=32)
+    ap.add_argument("--proj", type=int, default=32)
+    ap.add_argument("--scans", type=int, default=3)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--chunk", type=int, default=4)
+    ap.add_argument("--pbatch", type=int, default=4)
+    ap.add_argument("--strategy", default="strip2")
+    ap.add_argument("--shuffle", action="store_true",
+                    help="deliver chunks in shuffled angle order (the "
+                         "angle_indices contract makes this safe)")
+    args = ap.parse_args()
+
+    geom = Geometry().scaled(args.L, n_proj=args.proj)
+    print(f"geometry: {geom.L}^3, {geom.n_proj} views; "
+          f"{args.scans} scan(s) over {args.slots} slot(s)")
+    projs, mats, ref = make_dataset(geom)
+    projs = np.asarray(projs, np.float32)
+
+    order = np.arange(geom.n_proj)
+    if args.shuffle:
+        order = np.random.default_rng(0).permutation(order)
+    chunks = [order[i:i + args.chunk]
+              for i in range(0, geom.n_proj, args.chunk)]
+
+    eng = ReconstructionEngine(geom, n_slots=args.slots,
+                               strategy=args.strategy, pbatch=args.pbatch)
+    t0 = time.time()
+    sids = [eng.begin_scan(n_proj=geom.n_proj) for _ in range(args.scans)]
+    started = {sid: None for sid in sids}
+    finished = {}
+    # Round-robin arrival across scans, chunked, possibly shuffled.
+    for chunk in chunks:
+        for sid in sids:
+            if started[sid] is None:
+                started[sid] = time.time()
+            eng.submit(sid, projs[chunk], mats[chunk], chunk)
+            if eng.scans[sid].done and sid not in finished:
+                finished[sid] = time.time()
+    eng.drain()
+    for sid in sids:
+        finished.setdefault(sid, time.time())
+    print(f"streamed {args.scans * geom.n_proj} projections in "
+          f"{time.time() - t0:.2f}s "
+          f"({args.scans * geom.n_proj / (time.time() - t0):.1f} proj/s); "
+          f"fold ticks: {eng.stats['fold_ticks']}")
+
+    for sid in sids:
+        vol = np.asarray(eng.result(sid))
+        q = quality_report(vol, ref)
+        print(f"  scan {sid}: time-to-volume "
+              f"{finished[sid] - started[sid]:.2f}s, "
+              f"PSNR(ROI) = {q['psnr_roi_db']:.2f} dB")
+
+
+if __name__ == "__main__":
+    main()

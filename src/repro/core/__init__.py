@@ -13,6 +13,7 @@ from .backproject import (  # noqa: F401
     backproject_plane,
     backproject_plane_batch,
     contribution,
+    fold_projections,
     plane_coords,
     reconstruct,
     sample_gather,
@@ -29,7 +30,13 @@ from .clipping import (  # noqa: F401
     pad_projection,
     plan_strips,
 )
-from .filtering import filter_projections, ramlak_kernel  # noqa: F401
+from .filtering import (  # noqa: F401
+    FilterPlan,
+    apply_filter,
+    filter_projections,
+    make_filter_plan,
+    ramlak_kernel,
+)
 from .gather_ops import gather, onehot_gather, take_gather  # noqa: F401
 from .geometry import (  # noqa: F401
     Geometry,

@@ -66,6 +66,7 @@ __all__ = [
     "backproject_plane_batch",
     "backproject_one",
     "backproject_batch",
+    "fold_projections",
     "validate_strip_opts",
     "reconstruct",
 ]
@@ -522,30 +523,64 @@ def _reconstruct_batched(projections, matrices, volume, gs: GeomStatic,
             vol, imgs, mats, gs, strategy, opts_tuple, z0))
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("gs", "strategy", "opts_tuple",
-                                    "pbatch"))
-def _backproject_batch_jit(volume, images, mats, gs, strategy, opts_tuple,
-                           pbatch):
-    return _reconstruct_batched(images, mats, volume, gs, strategy,
-                                opts_tuple, pbatch, jnp.int32(0))
-
-
 def backproject_batch(volume, images, mats, geom: Geometry | GeomStatic,
                       strategy: str = "strip2",
                       pbatch: int = DEFAULT_PBATCH, **opts):
     """Add a stack of projections to ``volume``, ``pbatch`` per pass.
 
-    The batched analogue of :func:`backproject_one`: ``images`` is
-    ``(n_proj, n_v, n_u)``, ``mats`` ``(n_proj, 3, 4)``.  Unlike
-    :func:`reconstruct` this does not validate strip windows — callers
-    timing raw kernels (the tuner sweep) validate once themselves.
+    The batched analogue of :func:`backproject_one` (a
+    :func:`fold_projections` at ``z0=0``, sharing its jitted body):
+    ``images`` is ``(n_proj, n_v, n_u)``, ``mats`` ``(n_proj, 3, 4)``.
+    Unlike :func:`reconstruct` this does not validate strip windows —
+    callers timing raw kernels (the tuner sweep) validate once
+    themselves.
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
-    return _backproject_batch_jit(volume, jnp.asarray(images),
-                                  jnp.asarray(mats, jnp.float32), gs,
-                                  strategy, tuple(sorted(opts.items())),
-                                  int(pbatch))
+    return _fold_jit(jnp.asarray(volume), jnp.asarray(images),
+                     jnp.asarray(mats, jnp.float32), jnp.int32(0), gs,
+                     strategy, tuple(sorted(opts.items())), int(pbatch))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gs", "strategy", "opts_tuple",
+                                    "pbatch"))
+def _fold_jit(volume, images, mats, z0, gs, strategy, opts_tuple, pbatch):
+    return _reconstruct_batched(images, mats, volume, gs, strategy,
+                                opts_tuple, pbatch, z0)
+
+
+def fold_projections(volume, images, mats, geom: Geometry | GeomStatic,
+                     strategy: str = "strip2",
+                     pbatch: int = DEFAULT_PBATCH, z0=0, **opts):
+    """Incremental fold: add a projection *chunk* to an existing volume.
+
+    The streaming entry point (DESIGN.md §8): unlike
+    :func:`backproject_batch` the z offset ``z0`` is a traced argument,
+    so one compiled fold serves every z-slab of a sharded stream, and
+    ``volume`` may be a partial accumulation from earlier chunks — a
+    reconstruction becomes any sequence of folds whose chunks cover the
+    projection set exactly once, in any arrival order (fp32 summation
+    order differs, so cross-order agreement is ~1e-5, not bitwise).
+    Chunks longer than ``pbatch`` stream through
+    :func:`_stream_batches` exactly like :func:`reconstruct`.
+
+    Strip windows are validated against the host planner (memoised)
+    when ``geom`` is a full :class:`Geometry`; a bare
+    :class:`GeomStatic` caller must have validated the ``(geometry,
+    matrices, window)`` triple itself — the planner needs the full
+    acquisition description.
+    """
+    if isinstance(geom, Geometry):
+        gs = GeomStatic.of(geom)
+        validate_strip_opts(geom, mats, strategy, opts)
+    else:
+        gs = geom
+    images = jnp.asarray(images)
+    n = int(images.shape[0])
+    return _fold_jit(jnp.asarray(volume), images,
+                     jnp.asarray(mats, jnp.float32), jnp.asarray(z0,
+                     jnp.int32), gs, strategy, tuple(sorted(opts.items())),
+                     max(1, min(int(pbatch), n)) if n else 1)
 
 
 # Memo of (geometry, strategy, window, matrices) combinations already

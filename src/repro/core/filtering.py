@@ -29,6 +29,9 @@ streamed reconstruction pipeline.
 
 from __future__ import annotations
 
+import functools
+from typing import NamedTuple
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -36,6 +39,7 @@ import numpy as np
 from .geometry import Geometry
 
 __all__ = ["ramlak_kernel", "cosine_weights", "parker_weights",
+           "FilterPlan", "make_filter_plan", "apply_filter",
            "filter_projections"]
 
 
@@ -110,16 +114,32 @@ def parker_weights(geom: Geometry) -> np.ndarray:
     return (2.0 * w).astype(np.float32)
 
 
-def filter_projections(projections, geom: Geometry, dtype=jnp.float32,
-                       short_scan: bool | None = None) -> jnp.ndarray:
-    """Apply FDK weighting + ramp filter to ``(n_proj, n_v, n_u)`` rays.
+class FilterPlan(NamedTuple):
+    """Precomputed filter state for one geometry (device-resident).
 
-    Pure-jnp and jittable; vmapped over the projection axis.  The FFT
-    length is padded to the next power of two at least ``2 * n_u`` for
-    linear convolution.  ``short_scan`` adds Parker weights (default: on
-    whenever the sweep is below ``2*pi``).
+    ``parker`` is the *full* ``(n_proj, n_u)`` Parker weight table (or
+    ``None`` for full scans): a projection subset selects its own rows by
+    **angle index**, never by position in the subset — that positional
+    guess is exactly the mis-weighting bug this plan API replaced.
     """
-    projections = jnp.asarray(projections, dtype=dtype)
+
+    pad: int                        # FFT length (power of two >= 2*n_u)
+    n_u: int
+    n_proj: int
+    scale: float                    # FDK constant (delta * sdd/(2 sid) * du)
+    hf: jnp.ndarray                 # (pad//2+1,) complex ramp spectrum
+    cosw: jnp.ndarray               # (n_v, n_u) cosine weights
+    parker: jnp.ndarray | None      # (n_proj, n_u) or None (no short scan)
+
+
+@functools.lru_cache(maxsize=32)
+def make_filter_plan(geom: Geometry,
+                     short_scan: bool | None = None) -> FilterPlan:
+    """Host precompute for :func:`apply_filter`, cached per geometry.
+
+    ``short_scan`` adds the Parker weight table (default: on whenever the
+    sweep is below ``2*pi``).
+    """
     n_u = geom.n_u
     pad = 1
     while pad < 2 * n_u:
@@ -127,32 +147,86 @@ def filter_projections(projections, geom: Geometry, dtype=jnp.float32,
     h = ramlak_kernel(pad, geom.du)
     # Roll zero-lag to index 0 so FFT convolution aligns with the input.
     h = np.roll(h, -(pad // 2))
-    hf = jnp.asarray(np.fft.rfft(h))                      # complex (pad//2+1,)
+    hf = jnp.asarray(np.fft.rfft(h))                      # (pad//2+1,)
     cosw = jnp.asarray(cosine_weights(geom))
-
     if short_scan is None:
         short_scan = geom.sweep < 2.0 * np.pi - 1e-9
-    pw = (jnp.asarray(parker_weights(geom))[:, None, :] if short_scan
-          else None)                                      # (n_proj, 1, n_u)
-    if pw is not None and projections.ndim == 3 \
-            and projections.shape[0] != pw.shape[0]:
-        # A projection subset (streaming/sharded callers): weights for
-        # the first k angles.
-        pw = pw[:projections.shape[0]]
-
+    parker = jnp.asarray(parker_weights(geom)) if short_scan else None
     delta = float(geom.sweep / geom.n_proj)
     scale = delta * (geom.sdd / (2.0 * geom.sid)) * geom.du
+    return FilterPlan(pad=pad, n_u=n_u, n_proj=geom.n_proj, scale=scale,
+                      hf=hf, cosw=cosw, parker=parker)
 
-    def _apply(p, pk):  # (n_v, n_u) -> (n_v, n_u)
-        w = (p * cosw).astype(jnp.float32)
-        if pk is not None:
-            w = w * pk
-        wf = jnp.fft.rfft(w, n=pad, axis=-1)
-        f = jnp.fft.irfft(wf * hf, n=pad, axis=-1)[..., :n_u]
-        return (f * scale).astype(dtype)
 
-    if projections.ndim == 2:
-        return _apply(projections, None)
-    if pw is None:
-        return jax.vmap(lambda p: _apply(p, None))(projections)
-    return jax.vmap(_apply)(projections, pw)
+def apply_filter(projections, plan: FilterPlan, pw_rows=None,
+                 dtype=jnp.float32) -> jnp.ndarray:
+    """Cosine + (optional per-row Parker) + ramp filter, pure jnp.
+
+    ``projections`` is ``(k, n_v, n_u)``; ``pw_rows`` the matching
+    ``(k, n_u)`` Parker rows (already *selected by angle index*), or
+    ``None`` to skip short-scan weighting.  Jittable: the streaming
+    engine runs this on-device per arriving chunk, and the sharded
+    pipeline runs it per rank inside ``shard_map``.
+    """
+    w = (jnp.asarray(projections, dtype=dtype)
+         * plan.cosw).astype(jnp.float32)
+    if pw_rows is not None:
+        w = w * pw_rows[..., None, :]
+    wf = jnp.fft.rfft(w, n=plan.pad, axis=-1)
+    f = jnp.fft.irfft(wf * plan.hf, n=plan.pad, axis=-1)[..., :plan.n_u]
+    return (f * plan.scale).astype(dtype)
+
+
+def filter_projections(projections, geom: Geometry, dtype=jnp.float32,
+                       short_scan: bool | None = None,
+                       angle_indices=None) -> jnp.ndarray:
+    """Apply FDK weighting + ramp filter to ``(n_proj, n_v, n_u)`` rays.
+
+    Pure-jnp and jittable.  The FFT length is padded to the next power of
+    two at least ``2 * n_u`` for linear convolution.  ``short_scan`` adds
+    Parker weights (default: on whenever the sweep is below ``2*pi``).
+
+    Parker weights are a function of the projection *angle*, so a subset
+    of the stack must say which angles it holds: pass ``angle_indices``
+    (an int array of indices into ``geom.angles``, one per projection; a
+    scalar for a single 2-D projection).  A short-scan subset whose
+    length mismatches ``geom.n_proj`` without explicit indices raises —
+    the old behaviour silently handed any subset the weights of the
+    *first k* angles, which is wrong for every non-prefix subset a
+    streamed or ``proj``-sharded caller sends.
+    """
+    plan = make_filter_plan(geom, short_scan)
+    projections = jnp.asarray(projections, dtype=dtype)
+    single = projections.ndim == 2
+    if single:
+        projections = projections[None]
+    k = projections.shape[0]
+
+    pw_rows = None
+    if angle_indices is not None:
+        idx = jnp.atleast_1d(jnp.asarray(angle_indices, jnp.int32))
+        if idx.shape != (k,):
+            raise ValueError(
+                f"angle_indices has shape {idx.shape}; want ({k},) — one "
+                f"angle index per projection")
+        if not isinstance(idx, jax.core.Tracer):
+            lo, hi = int(jnp.min(idx)), int(jnp.max(idx))
+            if lo < 0 or hi >= geom.n_proj:
+                raise ValueError(
+                    f"angle_indices must lie in [0, {geom.n_proj}); got "
+                    f"range [{lo}, {hi}]")
+        if plan.parker is not None:
+            pw_rows = plan.parker[idx]
+    elif plan.parker is not None:
+        if k != geom.n_proj:
+            raise ValueError(
+                f"{k} projection(s) for a short-scan geometry with "
+                f"n_proj={geom.n_proj}: a subset must pass angle_indices "
+                f"(Parker weights depend on the projection angle; "
+                f"guessing the first {k} angles silently mis-weights "
+                f"every non-prefix subset).  Pass angle_indices=..., or "
+                f"short_scan=False to skip Parker weighting.")
+        pw_rows = plan.parker
+
+    out = apply_filter(projections, plan, pw_rows, dtype)
+    return out[0] if single else out

@@ -37,6 +37,7 @@ from repro.dist.sharding import (ShardingRules, logical_to_spec,
 
 from .backproject import (DEFAULT_PBATCH, GeomStatic, _reconstruct_batched,
                           validate_strip_opts)
+from .filtering import apply_filter, make_filter_plan
 from .geometry import Geometry
 
 __all__ = ["sharded_reconstruct", "reconstruct_shards"]
@@ -44,10 +45,19 @@ __all__ = ["sharded_reconstruct", "reconstruct_shards"]
 
 def reconstruct_shards(local_projs, local_mats, gs: GeomStatic,
                        strategy: str, opts_tuple, local_volume,
-                       pbatch: int = DEFAULT_PBATCH):
-    """Per-rank body: back-project the local projection subset."""
+                       pbatch: int = DEFAULT_PBATCH, z0=None):
+    """Per-rank body: back-project the local projection subset.
+
+    ``local_volume`` may be a z-slab of the full volume; ``z0`` is the
+    slab's first *global* z index (default 0 — a full-volume or
+    first-slab caller).  It used to be hard-coded to 0, so any caller
+    handing this body a non-first slab back-projected the wrong planes.
+    """
+    if z0 is None:
+        z0 = jnp.int32(0)
     return _reconstruct_batched(local_projs, local_mats, local_volume, gs,
-                                strategy, opts_tuple, pbatch, jnp.int32(0))
+                                strategy, opts_tuple, pbatch,
+                                jnp.asarray(z0, jnp.int32))
 
 
 def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
@@ -55,6 +65,8 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
                         volume_axis: str = "data",
                         proj_axes: tuple[str, ...] = ("model",),
                         pbatch: int | None = None,
+                        prefiltered: bool = True,
+                        short_scan: bool | None = None,
                         **opts):
     """Reconstruct on a device mesh.
 
@@ -62,6 +74,18 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     must divide by the product of ``proj_axes`` sizes, and ``geom.L`` by
     the ``volume_axis`` size.  Returns the full ``(L, L, L)`` volume with
     sharding ``P(volume_axis)`` on z.
+
+    ``prefiltered=False`` takes *raw* line integrals instead: each rank
+    FDK-filters its own projection subset on-device inside the
+    ``shard_map`` body (cosine + Parker + ramp, DESIGN.md §8) before
+    back-projecting, so the preprocessing stage scales out with the
+    ``proj`` axes.  Parker weights are selected by *global angle index*
+    — the full ``(n_proj, n_u)`` weight table is sharded along the
+    projection axis exactly like the projections, so every rank weights
+    its subset by the angles it actually holds.  (Filtering a non-prefix
+    subset used to be impossible without silent mis-weighting:
+    ``filter_projections`` handed any subset the first-k-angles
+    weights.)
 
     ``strategy="auto"`` resolves through the autotuner cache exactly like
     :func:`repro.core.backproject.reconstruct` — resolution (including
@@ -92,6 +116,22 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     if gs.L % z_shards:
         raise ValueError(f"L={gs.L} not divisible by {z_shards} z-shards")
 
+    plan = None
+    pw_full = None
+    if not prefiltered:
+        if projections.shape[0] != geom.n_proj:
+            raise ValueError(
+                f"prefiltered=False filters by global angle index, so the "
+                f"raw stack must be the full scan: got "
+                f"{projections.shape[0]} projections for "
+                f"n_proj={geom.n_proj}")
+        plan = make_filter_plan(geom, short_scan)
+        # The Parker table is sharded along the projection axis exactly
+        # like the projections, so rank k filters its subset with the
+        # weights of the angles it holds (ones = no short-scan weights).
+        pw_full = (plan.parker if plan.parker is not None
+                   else jnp.ones((geom.n_proj, geom.n_u), jnp.float32))
+
     # One sharding vocabulary with the LM path (repro.dist.sharding):
     # the CT decomposition is just two more logical axes — ``vol``
     # (z-planes, the paper's OpenMP plane split) and ``proj``.
@@ -99,11 +139,7 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     proj_spec = logical_to_spec(("proj",), rules, mesh)
     vol_spec = logical_to_spec(("vol",), rules, mesh)
 
-    @functools.partial(
-        jax.shard_map, mesh=mesh,
-        in_specs=(proj_spec, proj_spec, vol_spec),
-        out_specs=vol_spec)
-    def run(local_projs, local_mats, local_volume):
+    def slab_body(local_projs, local_mats, local_volume):
         # z offset of this rank's slab: planes are contiguous per shard.
         idx = jax.lax.axis_index(volume_axis)
         slab = local_volume.shape[0]
@@ -120,6 +156,22 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
             partial = jax.lax.psum(partial, ax)
         return partial
 
+    if prefiltered:
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(proj_spec, proj_spec, vol_spec),
+            out_specs=vol_spec)
+        def run(local_projs, local_mats, local_volume):
+            return slab_body(local_projs, local_mats, local_volume)
+    else:
+        @functools.partial(
+            jax.shard_map, mesh=mesh,
+            in_specs=(proj_spec, proj_spec, proj_spec, vol_spec),
+            out_specs=vol_spec)
+        def run(local_projs, local_mats, local_pw, local_volume):
+            local_projs = apply_filter(local_projs, plan, local_pw)
+            return slab_body(local_projs, local_mats, local_volume)
+
     with sharding_context(mesh, rules):
         # shard_constraint is the placement mechanism here — the same
         # annotation idiom (and specs) the LM layers use, not a parallel
@@ -131,7 +183,10 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
                                        ("proj", None, None))
         matrices = shard_constraint(jnp.asarray(matrices, jnp.float32),
                                     ("proj", None, None))
-        return run(projections, matrices, volume)
+        if prefiltered:
+            return run(projections, matrices, volume)
+        pw_full = shard_constraint(pw_full, ("proj", None))
+        return run(projections, matrices, pw_full, volume)
 
 
 def _reconstruct_slab(local_projs, local_mats, gs, strategy, opts_tuple,

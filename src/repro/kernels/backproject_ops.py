@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import functools
 import hashlib
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -171,6 +172,11 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
             width = int(tuned.get("width", width))
             double_buffer = bool(tuned.get("double_buffer", double_buffer))
             micro = bool(tuned.get("micro", micro))
+            # The tuned micro decision was validated at a specific
+            # window; resolve the whole window, not just the flag.
+            micro_group = int(tuned.get("micro_group", micro_group))
+            micro_band = int(tuned.get("micro_band", micro_band))
+            micro_width = int(tuned.get("micro_width", micro_width))
     elif strategy != "fixed":
         raise ValueError(
             f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
@@ -264,6 +270,19 @@ def pallas_backproject_batch(volume, images, mats,
             band = int(tuned.get("band", band))
             width = int(tuned.get("width", width))
             pbatch = int(tuned.get("pbatch", pbatch))
+            ignored = [k for k in ("double_buffer", "micro")
+                       if tuned.get(k)]
+            if ignored:
+                # The batch kernel supports neither variant; running
+                # anyway is correct (plain batch path) but NOT the
+                # configuration the tuner validated and timed — say so
+                # loudly instead of silently shedding the tuned flags.
+                warnings.warn(
+                    f"pallas_backproject_batch ignores tuned "
+                    f"{'/'.join(ignored)} for this geometry: the batch "
+                    f"kernel has no such variant, so the run will not "
+                    f"match the tuned decision's performance profile",
+                    RuntimeWarning, stacklevel=2)
     elif strategy != "fixed":
         raise ValueError(
             f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")

@@ -1,0 +1,6 @@
+"""Streamed reconstruction: serve CT scans the way the LM engine serves
+prompts (DESIGN.md §8)."""
+
+from .engine import ReconstructionEngine, ScanState  # noqa: F401
+
+__all__ = ["ReconstructionEngine", "ScanState"]

@@ -1,0 +1,345 @@
+"""Streamed reconstruction engine: slot-based continuous batching for CT.
+
+The paper's production setting is a C-arm that delivers projections *as a
+stream* — end-to-end latency is set by how much of the filter and
+back-projection work overlaps the acquisition, not by the back projection
+alone (Treibig et al., arXiv:1104.5243).  This engine is the CT analogue
+of :class:`repro.serving.engine.ServingEngine`:
+
+* fixed ``n_slots`` concurrent reconstructions share one resident volume
+  stack ``(n_slots, L, L, L)`` and one jitted fold step;
+* an arriving chunk is FDK-filtered **on device the moment it arrives**,
+  with Parker weights selected by its explicit *angle indices* (the
+  ``filter_projections(..., angle_indices=...)`` contract — arrival order
+  never has to match angle order);
+* filtered projections accumulate in a per-scan staging buffer and are
+  folded ``pbatch`` at a time through the batch-major loop nest
+  (:func:`repro.core.backproject._backproject_batch_body`), so a chunk
+  pays one volume pass, not one pass per projection (DESIGN.md §7/§8);
+* every tick folds *all* ready slots in one vmapped+masked jitted call —
+  B scans in flight cost one compiled step, mirroring the LM engine's
+  ``_masked_decode_step`` slot discipline;
+* finished scans retire, their slot is zeroed and immediately refilled
+  from the admission queue (continuous batching).
+
+Summation order within a volume follows arrival order, so a streamed
+result matches the one-shot :func:`repro.core.backproject.reconstruct`
+of the same projection set to fp32 rounding (~1e-5), not bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backproject import (DEFAULT_PBATCH, GeomStatic,
+                                    _backproject_batch_body,
+                                    validate_strip_opts)
+from repro.core.filtering import FilterPlan, apply_filter, make_filter_plan
+from repro.core.geometry import Geometry
+
+__all__ = ["ScanState", "ReconstructionEngine"]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("pad", "n_u", "n_proj", "scale"))
+def _filter_chunk(projs, idx, cosw, hf, parker, pad, n_u, n_proj, scale):
+    """On-device per-chunk FDK filter with angle-indexed Parker rows.
+
+    Module-level jit: the compile cache is keyed on (chunk shape, plan
+    statics), so every engine over the same geometry shares one trace
+    per chunk size.
+    """
+    plan = FilterPlan(pad=pad, n_u=n_u, n_proj=n_proj, scale=scale,
+                      hf=hf, cosw=cosw, parker=parker)
+    pw = parker[idx] if parker is not None else None
+    return apply_filter(projs, plan, pw)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("gs", "strategy", "opts_tuple"))
+def _fold_slots(volumes, images, mats, mask, gs, strategy, opts_tuple):
+    """One engine tick on device: fold a ``pbatch``-deep batch into every
+    masked-in slot volume.
+
+    ``volumes`` is ``(B, L, L, L)``, ``images`` ``(B, pbatch, n_v,
+    n_u)``, ``mats`` ``(B, pbatch, 3, 4)``, ``mask`` ``(B,)`` bool.  The
+    per-slot body is the batch-major volume pass of DESIGN.md §7 vmapped
+    over slots; masked-out slots keep their volume bit-identical (their
+    staged images are zero anyway, but the merge makes the guarantee
+    unconditional — same idiom as the LM engine's masked decode step).
+    """
+
+    def one(vol, imgs, ms):
+        return _backproject_batch_body(vol, imgs, ms, gs, strategy,
+                                       opts_tuple, jnp.int32(0))
+
+    new = jax.vmap(one)(volumes, images, mats)
+    return jnp.where(mask[:, None, None, None], new, volumes)
+
+
+@dataclasses.dataclass
+class ScanState:
+    """One reconstruction in flight (the CT analogue of ``Request``)."""
+
+    sid: int
+    n_proj: int                       # projections this scan will deliver
+    received: int = 0
+    folded: int = 0
+    # Staged (filtered image, matrix) pairs awaiting a volume pass.
+    pending: list = dataclasses.field(default_factory=list)
+    volume: jnp.ndarray | None = None  # set at retirement
+    done: bool = False
+
+    @property
+    def complete(self) -> bool:
+        """All projections submitted (folds may still be outstanding)."""
+        return self.received >= self.n_proj
+
+
+class ReconstructionEngine:
+    """Accept projection chunks in arrival order; serve volumes.
+
+    ``submit(sid, projection, matrix, angle_index)`` takes one ``(n_v,
+    n_u)`` projection (scalar ``angle_index``) or a ``(k, n_v, n_u)``
+    chunk (``angle_index`` array of k global angle indices) — raw line
+    integrals, filtered here on arrival.  ``strategy="auto"`` resolves
+    through the autotuner cache exactly like ``reconstruct``; strip
+    windows are validated against the host planner per submitted chunk
+    (memoised), so an undersized window raises instead of dropping taps.
+    """
+
+    def __init__(self, geom: Geometry, *, n_slots: int = 4,
+                 strategy: str = "strip2", pbatch: int | None = None,
+                 short_scan: bool | None = None, validate: bool = True,
+                 auto_step: bool = True, **opts):
+        self.geom = geom
+        self.gs = GeomStatic.of(geom)
+        if strategy == "auto":
+            from repro.tune.cache import resolve_strategy
+
+            strategy, opts = resolve_strategy(self.gs, opts)
+        if pbatch is None:
+            pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
+        else:
+            opts.pop("pbatch", None)
+        self.strategy = strategy
+        self.pbatch = max(1, int(pbatch))
+        self.opts = dict(opts)
+        self._opts_tuple = tuple(sorted(opts.items()))
+        self.validate = validate
+        self.auto_step = auto_step
+        self.n_slots = int(n_slots)
+        self.plan = make_filter_plan(geom, short_scan)
+        self._volumes = jnp.zeros((self.n_slots,) + (geom.L,) * 3,
+                                  jnp.float32)
+        self._zero_image = jnp.zeros((geom.n_v, geom.n_u), jnp.float32)
+        self.slot_scan: list[int | None] = [None] * self.n_slots
+        self.scans: dict[int, ScanState] = {}
+        self.queue: list[int] = []
+        self.slot_history: list[tuple[int, int]] = []  # (slot, sid)
+        self.stats = {"folds": 0, "fold_ticks": 0, "retired": 0}
+        self._next_sid = 0
+
+    # ------------------------------------------------------------------
+    # Admission
+    # ------------------------------------------------------------------
+    def begin_scan(self, n_proj: int | None = None) -> int:
+        """Register a new reconstruction; returns its scan id.
+
+        The scan occupies a volume slot immediately when one is free,
+        else it queues (its chunks are still filtered and staged on
+        arrival) until a running scan retires — continuous batching.
+        """
+        sid = self._next_sid
+        self._next_sid += 1
+        self.scans[sid] = ScanState(
+            sid=sid, n_proj=int(n_proj) if n_proj else self.geom.n_proj)
+        self.queue.append(sid)
+        self._admit()
+        return sid
+
+    def _free_slots(self):
+        return [i for i, s in enumerate(self.slot_scan) if s is None]
+
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            sid = self.queue.pop(0)
+            self.slot_scan[slot] = sid
+            self.slot_history.append((slot, sid))
+
+    # ------------------------------------------------------------------
+    # Arrival path
+    # ------------------------------------------------------------------
+    def submit(self, sid: int, projection, matrix, angle_index):
+        """Stage one projection (or chunk) of scan ``sid``.
+
+        Filters on device now — with the Parker rows of the *submitted
+        angle indices* — and stages the result for the next fold tick.
+        Arrival order is free: chunks may be shuffled, interleaved
+        across scans, and split arbitrarily.
+        """
+        scan = self.scans[sid]
+        if scan.done:
+            raise ValueError(f"scan {sid} already finished")
+        projs = jnp.asarray(projection, jnp.float32)
+        if projs.ndim == 2:
+            projs = projs[None]
+        mats = np.asarray(matrix, np.float64).reshape(-1, 3, 4)
+        idx = np.atleast_1d(np.asarray(angle_index, np.int32))
+        k = projs.shape[0]
+        if mats.shape[0] != k or idx.shape != (k,):
+            raise ValueError(
+                f"chunk of {k} projection(s) needs {k} matrices and {k} "
+                f"angle indices; got {mats.shape[0]} and {idx.shape}")
+        if idx.min() < 0 or idx.max() >= self.geom.n_proj:
+            raise ValueError(
+                f"angle indices must lie in [0, {self.geom.n_proj})")
+        if scan.received + k > scan.n_proj:
+            raise ValueError(
+                f"scan {sid} declared {scan.n_proj} projections; "
+                f"{scan.received + k} submitted")
+        if self.validate:
+            validate_strip_opts(self.geom, mats, self.strategy, self.opts)
+        filt = _filter_chunk(
+            projs, jnp.asarray(idx), self.plan.cosw, self.plan.hf,
+            self.plan.parker, pad=self.plan.pad, n_u=self.plan.n_u,
+            n_proj=self.plan.n_proj, scale=self.plan.scale)
+        mats32 = np.asarray(mats, np.float32)
+        for i in range(k):
+            scan.pending.append((filt[i], mats32[i]))
+        scan.received += k
+        if self.auto_step:
+            self.step()
+
+    # ------------------------------------------------------------------
+    # Fold path
+    # ------------------------------------------------------------------
+    def _take_batch(self, scan: ScanState):
+        """Up to ``pbatch`` staged projections, zero-padded to depth.
+
+        Padding images are zero (their contribution is exactly 0.0) and
+        padding matrices repeat a real, validated matrix so the strip
+        planner's coverage guarantee extends to the pad rows.
+        """
+        take = scan.pending[:self.pbatch]
+        del scan.pending[:self.pbatch]
+        imgs = [img for img, _ in take]
+        mats = [m for _, m in take]
+        while len(imgs) < self.pbatch:
+            imgs.append(self._zero_image)
+            mats.append(mats[0])
+        return jnp.stack(imgs), np.stack(mats), len(take)
+
+    def step(self) -> bool:
+        """One engine tick: fold every ready slot, retire finished scans.
+
+        A slot is *ready* when it holds a full ``pbatch`` of staged
+        projections, or its scan is complete (the sub-``pbatch``
+        remainder folds zero-padded — same compiled step, DESIGN.md §8).
+        All ready slots fold in one vmapped jitted call.  Returns True
+        when any fold or retirement happened.
+        """
+        self._admit()
+        ready = []
+        for slot, sid in enumerate(self.slot_scan):
+            if sid is None:
+                continue
+            scan = self.scans[sid]
+            if len(scan.pending) >= self.pbatch \
+                    or (scan.complete and scan.pending):
+                ready.append((slot, scan))
+        progressed = False
+        if ready:
+            images = [self._zero_image[None].repeat(self.pbatch, axis=0)
+                      ] * self.n_slots
+            mats = [np.broadcast_to(np.eye(3, 4, dtype=np.float32),
+                                    (self.pbatch, 3, 4))] * self.n_slots
+            mask = np.zeros((self.n_slots,), bool)
+            for slot, scan in ready:
+                imgs, ms, n = self._take_batch(scan)
+                images[slot] = imgs
+                mats[slot] = ms
+                mask[slot] = True
+                scan.folded += n
+                self.stats["folds"] += n
+            self._volumes = _fold_slots(
+                self._volumes, jnp.stack(images),
+                jnp.asarray(np.stack(mats)), jnp.asarray(mask), self.gs,
+                self.strategy, self._opts_tuple)
+            self.stats["fold_ticks"] += 1
+            progressed = True
+        progressed |= self._retire()
+        return progressed
+
+    def _retire(self) -> bool:
+        any_retired = False
+        for slot, sid in enumerate(self.slot_scan):
+            if sid is None:
+                continue
+            scan = self.scans[sid]
+            if scan.complete and not scan.pending:
+                scan.volume = self._volumes[slot]
+                scan.done = True
+                self._volumes = self._volumes.at[slot].set(0.0)
+                self.slot_scan[slot] = None
+                self.stats["retired"] += 1
+                any_retired = True
+                del self.slot_history[:-4096]   # bound a long-lived server
+        if any_retired:
+            self._admit()
+        return any_retired
+
+    # ------------------------------------------------------------------
+    # Results
+    # ------------------------------------------------------------------
+    def drain(self, max_ticks: int = 100_000) -> int:
+        """Fold until no slot can make progress; returns ticks run.
+
+        Scans that have not submitted all their projections keep their
+        sub-``pbatch`` staging buffers — drain never forces a partial
+        scan to a (wrong) early result.
+        """
+        ticks = 0
+        while ticks < max_ticks and self.step():
+            ticks += 1
+        return ticks
+
+    def result(self, sid: int, pop: bool = False) -> jnp.ndarray:
+        """The finished ``(L, L, L)`` volume of scan ``sid``.
+
+        ``pop=True`` releases the scan's state after fetching — a
+        long-running server must do one of ``pop``/:meth:`release` per
+        scan, or retired volumes (``L³·4`` bytes each) accumulate in
+        ``self.scans`` forever.
+        """
+        scan = self.scans[sid]
+        if not scan.done:
+            raise ValueError(
+                f"scan {sid} not finished: {scan.received}/{scan.n_proj} "
+                f"submitted, {len(scan.pending)} staged"
+                + ("" if scan.complete else " (more submissions expected)"))
+        vol = scan.volume
+        if pop:
+            self.release(sid)
+        return vol
+
+    def release(self, sid: int) -> None:
+        """Drop a *finished* scan's state (and its retained volume)."""
+        scan = self.scans.get(sid)
+        if scan is None:
+            return
+        if not scan.done:
+            raise ValueError(f"scan {sid} still active; cannot release")
+        del self.scans[sid]
+
+    @property
+    def active(self) -> int:
+        """Scans currently holding slots or queued."""
+        return sum(s is not None for s in self.slot_scan) + len(self.queue)

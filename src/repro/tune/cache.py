@@ -43,8 +43,12 @@ DEFAULT_STRATEGY = "strip2"
 # are *ignored*, never misread into the new dataclass.
 TUNE_SCHEMA_VERSION = 2
 
+# ``micro_*`` ride along with ``micro``: a tuned micro decision was
+# validated (and timed) at a specific ``(micro_band, micro_width)``
+# window — resolving the flag without the window would run the kernel at
+# defaults it was never validated at.
 _PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer", "micro",
-                "pbatch")
+                "micro_group", "micro_band", "micro_width", "pbatch")
 
 # Options each jnp strategy actually accepts — caller options riding
 # along with strategy="auto" are filtered to the *resolved* strategy, so

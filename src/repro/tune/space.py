@@ -125,7 +125,12 @@ def pallas_candidates(gs: GeomStatic,
     cands = [
         Candidate.of("pallas", **base),
         Candidate.of("pallas", double_buffer=True, **base),
-        Candidate.of("pallas", micro=True, **base),
+        # The micro candidate names its window explicitly so the values
+        # it is validated and timed at are the values that persist into
+        # the TunedConfig — resolving ``micro=True`` without them would
+        # run windows the sweep never saw.
+        Candidate.of("pallas", micro=True, micro_group=min(8, gs.L),
+                     micro_band=8, micro_width=32, **base),
     ]
     for pb in pbatches:
         if pb > 1 and pallas_batch_fits_vmem(gs, pbatch=pb, **base):

@@ -141,9 +141,15 @@ def sweep_strategies(geom: Geometry, *, image=None, A=None,
                     gs, opts.get("ty", 8), opts.get("chunk", 128),
                     opts.get("band", 16), opts.get("width", 512))
                 for A_i in mats_all:
+                    # Micro candidates validate at *their* window values
+                    # — the same values the candidate persists, so the
+                    # resolved config always ran through this check.
                     validate_strip_config(
                         geom, A_i, ty=ty, chunk=chunk, band=band,
-                        width=width, micro=bool(opts.get("micro", False)))
+                        width=width, micro=bool(opts.get("micro", False)),
+                        micro_group=int(opts.get("micro_group", 8)),
+                        micro_band=int(opts.get("micro_band", 8)),
+                        micro_width=int(opts.get("micro_width", 32)))
                 if pbatch == 1:
                     t = time_fn(pallas_backproject_one, vol0, image, A,
                                 geom, warmup=warmup, iters=iters, **tkw,

@@ -47,7 +47,7 @@ def test_json_trajectory_from_tiny_fig1(tmp_path, monkeypatch):
     the next run instead of overwriting."""
     monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
     clear_memory_cache()
-    monkeypatch.setattr(common, "TINY", True)
+    monkeypatch.setattr(common, "TINY_ENV", True)
     path = tmp_path / "bench.json"
 
     bench_run.main(["--only", "fig1_single_device", "--json", str(path)])
@@ -94,7 +94,7 @@ def test_table5_traffic_models_pbatch_reduction(tmp_path, monkeypatch):
     depth (acceptance criterion)."""
     monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
     clear_memory_cache()
-    monkeypatch.setattr(common, "TINY", True)
+    monkeypatch.setattr(common, "TINY_ENV", True)
     path = tmp_path / "bench.json"
     bench_run.main(["--only", "fig1_single_device,table5_traffic",
                     "--json", str(path)])
@@ -199,3 +199,59 @@ def test_regression_gate_rejects_empty_fresh(tmp_path):
         check_regression.main(["--baseline", str(tmp_path / "b.json"),
                                "--fresh", str(fresh)])
     assert exc.value.code == 2
+
+
+def test_regression_gate_fails_when_all_baseline_rows_dropped(tmp_path,
+                                                              capsys):
+    """A fresh run whose benchmark modules crashed emits no comparable
+    rows; that used to sail through as 'no regressions'.  Zero rows
+    compared with baseline rows expected = gate failure, and the missing
+    rows are named."""
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/gather": 1000.0, "fig4/ttfv/b1": 5000.0})
+    _traj(fresh, {"other/row": 10.0})     # module crashed: rows dropped
+    with pytest.raises(SystemExit) as exc:
+        check_regression.main(["--baseline", str(base), "--fresh",
+                               str(fresh), "--min-us", "200"])
+    assert exc.value.code == 1
+    out = capsys.readouterr()
+    assert "MISSING fig1/gather" in out.out
+    assert "MISSING fig4/ttfv/b1" in out.out
+    assert "zero rows compared" in out.err
+
+
+def test_regression_gate_reports_partially_missing_rows(tmp_path, capsys):
+    """Rows above --min-us that vanished are reported even when other
+    rows still compare (and pass); noise-floor rows are not."""
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/gather": 1000.0, "fig4/ttfv/b1": 5000.0,
+                 "fig1/tiny": 10.0})
+    _traj(fresh, {"fig1/gather": 1100.0})
+    check_regression.main(["--baseline", str(base), "--fresh", str(fresh),
+                           "--min-us", "200"])
+    out = capsys.readouterr().out
+    assert "MISSING fig4/ttfv/b1" in out
+    assert "fig1/tiny" not in out          # below the noise floor
+    assert "no regressions" in out
+
+
+def test_tiny_does_not_latch_across_inprocess_runs(monkeypatch):
+    """--tiny must not leak into a later in-process main() without the
+    flag (RESULTS/EXTRAS were reset; TINY silently stayed True)."""
+    monkeypatch.setattr(common, "TINY", False)
+    monkeypatch.setattr(common, "TINY_ENV", False)
+    with pytest.raises(SystemExit):
+        bench_run.main(["--tiny", "--only", "nonexistent_module"])
+    assert common.TINY is False            # parse failed before assign
+    bench_run.main(["--tiny", "--only", "moe_dispatch"])
+    assert common.TINY is True
+    bench_run.main(["--only", "moe_dispatch"])
+    assert common.TINY is False            # assigned, not latched
+    # The REPRO_BENCH_TINY env opt-in survives the per-run assignment.
+    monkeypatch.setattr(common, "TINY_ENV", True)
+    bench_run.main(["--only", "moe_dispatch"])
+    assert common.TINY is True

@@ -50,6 +50,32 @@ def test_sharded_reconstruct_matches_single_device():
     assert rec["sum"] != 0.0
 
 
+def test_sharded_prefiltered_false_weights_nonprefix_ranks():
+    """prefiltered=False on a real 2x2 mesh: rank 1 of the proj axis
+    holds a *non-prefix* angle subset, so a correct result proves the
+    in-shard filter used angle-indexed Parker rows (the old prefix
+    contract would have weighted ranks > 0 with rank 0's angles)."""
+    rec = _run_child(4, """
+        from repro.core import Geometry, filter_projections, reconstruct
+        from repro.core.phantom import make_dataset
+        from repro.core.pipeline import sharded_reconstruct
+        from repro.launch.mesh import make_local_mesh
+        geom = Geometry().scaled(16, n_proj=4)
+        projs, mats, ref = make_dataset(geom)
+        mesh = make_local_mesh(data=2, model=2)
+        out = sharded_reconstruct(projs, mats, geom, mesh,
+                                  prefiltered=False)
+        filt = np.asarray(filter_projections(projs, geom))
+        single = reconstruct(filt, mats, geom)
+        print(json.dumps({
+            "max_abs_diff": float(jnp.max(jnp.abs(out - single))),
+            "nonzero": bool(jnp.any(out != 0.0)),
+        }))
+    """)
+    assert rec["nonzero"]
+    assert rec["max_abs_diff"] < 1e-5
+
+
 def test_compress_psum_error_feedback():
     """int8-compressed all-reduce converges to the true mean via EF."""
     rec = _run_child(4, """

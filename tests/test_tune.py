@@ -197,6 +197,71 @@ def test_pallas_auto_uses_tuned_tiles(ct_case):
         pallas_backproject_one(vol0, img, A, GEOM, strategy="strip")
 
 
+def test_pallas_auto_resolves_full_micro_window(ct_case):
+    """A tuned ``micro=True`` decision carries its validated
+    ``(micro_group, micro_band, micro_width)`` window through the cache
+    — auto used to resolve the flag but run default windows the sweep
+    never validated."""
+    from repro.tune import resolve_pallas_config
+    from repro.tune.space import pallas_candidates
+
+    # The swept micro candidate names its window explicitly, so the
+    # timed/validated values are the persisted values.
+    micro_cands = [c for c in pallas_candidates(GS)
+                   if dict(c.opts).get("micro")]
+    assert micro_cands
+    for c in micro_cands:
+        opts = dict(c.opts)
+        assert {"micro_group", "micro_band", "micro_width"} <= set(opts)
+
+    backend, device_kind = device_identity()
+    tuned_win = {"micro_group": 8, "micro_band": 12, "micro_width": 64}
+    cfg = TunedConfig(strategy="strip2", opts={}, backend=backend,
+                      device_kind=device_kind, us_per_call=1.0,
+                      pallas={"ty": 8, "chunk": 16, "band": 16,
+                              "width": 128, "micro": True, **tuned_win})
+    store_tuned(GS, cfg)
+    resolved = resolve_pallas_config(GS)
+    for k, v in tuned_win.items():
+        assert resolved[k] == v
+
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    img, A = jnp.asarray(filt[0]), jnp.asarray(mats[0])
+    out_auto = pallas_backproject_one(vol0, img, A, GEOM, strategy="auto")
+    out_fix = pallas_backproject_one(vol0, img, A, GEOM, ty=8, chunk=16,
+                                     band=16, width=128, micro=True,
+                                     **tuned_win)
+    np.testing.assert_array_equal(np.asarray(out_auto),
+                                  np.asarray(out_fix))
+
+
+def test_pallas_batch_warns_on_ignored_tuned_flags(ct_case):
+    """The batch kernel has no double_buffer/micro variant; silently
+    shedding a tuned flag misrepresents the tuned decision — it must
+    warn loudly."""
+    import warnings
+
+    from repro.kernels.backproject_ops import pallas_backproject_batch
+
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="strip2", opts={}, backend=backend,
+                      device_kind=device_kind, us_per_call=1.0,
+                      pallas={"ty": 8, "chunk": 16, "band": 16,
+                              "width": 128, "double_buffer": True,
+                              "pbatch": 2})
+    store_tuned(GS, cfg)
+    with pytest.warns(RuntimeWarning, match="ignores tuned"):
+        out = pallas_backproject_batch(vol0, filt, mats, GEOM,
+                                       strategy="auto")
+    # Correctness is unaffected — only the perf profile differs.
+    ref = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=8, chunk=16,
+                                   band=16, width=128, pbatch=2)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
 def test_sharded_reconstruct_auto(ct_case):
     """auto resolves host-side before shard_map (1x1 mesh, bitwise)."""
     from repro.core.pipeline import sharded_reconstruct
