@@ -63,7 +63,16 @@ def compare(baseline_run: dict, fresh_run: dict, *, threshold: float,
     """Return (regressions, n_compared, missing); a regression is
     ``(row name, baseline us, fresh us)``, ``missing`` the baseline rows
     above ``min_us`` that the fresh run did not emit at all (a crashed
-    benchmark module drops its rows — that must not read as a pass)."""
+    benchmark module drops its rows — that must not read as a pass).
+
+    A sub-``min_us`` median is timer noise whichever file it sits in:
+    a baseline below the floor is never a denominator (a noise-scale
+    baseline under an above-floor fresh row would fail on nothing but
+    the baseline's jitter), and a fresh row below the floor is never a
+    numerator (it can only ever look like an improvement, which the
+    gate doesn't score) — incomparable in *both* directions, skipped
+    outright.
+    """
     base = _rows(baseline_run)
     fresh = _rows(fresh_run)
     regressions = []
@@ -75,6 +84,8 @@ def compare(baseline_run: dict, fresh_run: dict, *, threshold: float,
         fresh_us = fresh.get(name)
         if fresh_us is None:
             missing.append(name)
+            continue
+        if fresh_us < min_us:
             continue
         n += 1
         if fresh_us > threshold * base_us:

@@ -8,11 +8,16 @@ hiding is the Pallas grid pipeline, measured structurally in fig3.)
 After the per-strategy rows, ``fig1/batch/p*`` times the projection-
 batched loop nest (DESIGN.md §7) against the per-projection nest at
 several ``pbatch`` depths — same strategy, same projections, only the
-volume-residency structure changes.  Then the autotuner sweeps its
-candidate space on this geometry (now including the ``pbatch`` axis),
-persists the winner (``.repro_tune/``), and the ``fig1/auto`` row times
-``strategy="auto"`` resolving through that cache — the chosen config
-lands in the ``--json`` trajectory via ``record_extra``.
+volume-residency structure changes.  ``fig1/batch_db/p*`` and
+``fig1/batch_micro/p*`` then time the batched *Pallas kernel* variants
+(DESIGN.md §9: deep DMA pipeline, micro-window compute) on a smaller
+kernel-sized volume — structural numbers in interpret mode off-TPU,
+compiled on TPU, comparable within one backend either way.  Then the
+autotuner sweeps its candidate space on this geometry (now including
+the ``pbatch × {plain, db, micro}`` cross), persists the winner
+(``.repro_tune/``), and the ``fig1/auto`` row times ``strategy="auto"``
+resolving through that cache — the chosen config lands in the
+``--json`` trajectory via ``record_extra``.
 """
 
 from __future__ import annotations
@@ -20,12 +25,14 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.backproject import STRATEGIES, backproject_one, reconstruct
+from repro.kernels.backproject_ops import pallas_backproject_batch
 from repro.tune import autotune
 
 from .common import (STRATEGY_OPTS, bench_size, ct_problem, emit,
                      record_extra, time_fn)
 
 PBATCHES = (1, 2, 4)
+KERNEL_PBATCHES = (2, 4)
 
 
 def run(L: int | None = None):
@@ -53,6 +60,29 @@ def run(L: int | None = None):
         emit(f"fig1/batch/p{pb}", t * 1e6,
              f"gups={n_proj * L ** 3 / t / 1e9:.4f} L={L} pbatch={pb} "
              f"nproj={n_proj}")
+
+    # Batched kernel variants: full n_proj stack per call through the
+    # Pallas batch path, db (depth-2 rotation) and micro-window compute.
+    # A smaller volume keeps interpret-mode (off-TPU) rows tractable;
+    # the rows compare variants against each other, not against the jnp
+    # rows above.
+    Lk = bench_size(32, 16)
+    geom_k, filt_k, mats_k, _ = ct_problem(Lk, n_proj=n_proj)
+    vol0_k = jnp.zeros((Lk,) * 3, jnp.float32)
+    tiles = dict(ty=8, chunk=min(32, Lk), band=16, width=128)
+    for pb in sorted({min(pb, n_proj) for pb in KERNEL_PBATCHES}):
+        for tag, flags in (("batch_db", dict(double_buffer=True,
+                                             db_depth=2)),
+                           ("batch_micro", dict(micro=True))):
+            # A wider sampling window than the 50 ms default: these rows
+            # feed the tightened regression gate, and interpret-mode
+            # medians over ~10 samples drift with host contention.
+            t = time_fn(pallas_backproject_batch, vol0_k, filt_k, mats_k,
+                        geom_k, pbatch=pb, warmup=1, iters=3,
+                        min_total_s=0.3, **tiles, **flags)
+            emit(f"fig1/{tag}/p{pb}", t * 1e6,
+                 f"gups={n_proj * Lk ** 3 / t / 1e9:.4f} L={Lk} "
+                 f"pbatch={pb} nproj={n_proj}")
 
     cfg = autotune(geom, image=image, A=A, warmup=1, iters=3)
     opts = dict(cfg.opts)

@@ -45,6 +45,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["backproject_kernel", "backproject_kernel_batch",
+           "backproject_kernel_batch_db", "backproject_kernel_batch_micro",
            "backproject_volume_pallas", "backproject_volume_pallas_batch"]
 
 _EPS_W = 1e-6
@@ -218,6 +219,72 @@ def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
         vol_out_ref[...] = vol_in_ref[...]
 
 
+def _micro_tile_accumulate(wait_strip, read_window, update, ix, iy, r, *,
+                           r0, c0, ty, chunk, band, width, group, gband,
+                           gwidth):
+    """Parts 2+3 per ``group``-voxel micro-window against a resident
+    strip — the one implementation the single-projection micro kernel and
+    the batched micro variant share, so the planner-validated
+    ``(micro_band, micro_width)`` window semantics exist exactly once.
+
+    ``wait_strip`` blocks on the strip DMA (called once the per-voxel tap
+    coordinates are built, so the copy overlaps the selector
+    arithmetic); ``read_window(r0g, c0g)`` returns the ``(gband,
+    gwidth)`` sub-window at an in-strip origin; ``update(row, col,
+    val)`` folds one group's ``(group,)`` f32 contribution into the
+    accumulation target at tile row ``row``, columns ``[col, col +
+    group)``.
+    """
+    fx = jnp.floor(ix)
+    fy = jnp.floor(iy)
+    sx = (ix - fx).reshape(ty * chunk)
+    sy = (iy - fy).reshape(ty * chunk)
+    rel_r = (fy.astype(jnp.int32) + 1 - r0).reshape(ty * chunk)
+    rel_c = (fx.astype(jnp.int32) + 1 - c0).reshape(ty * chunk)
+    rw2 = (r * r).reshape(ty * chunk)
+
+    wait_strip()
+    n_groups = (ty * chunk) // group
+    cols_per_row = chunk // group
+
+    biota = jax.lax.broadcasted_iota(jnp.int32, (group, gband), 1)
+    wiota = jax.lax.broadcasted_iota(jnp.int32, (group, gwidth), 1)
+
+    def one_group(g, _):
+        gs_ = g * group
+        rr = jax.lax.dynamic_slice(rel_r, (gs_,), (group,))
+        cc = jax.lax.dynamic_slice(rel_c, (gs_,), (group,))
+        sxg = jax.lax.dynamic_slice(sx, (gs_,), (group,))
+        syg = jax.lax.dynamic_slice(sy, (gs_,), (group,))
+        wg = jax.lax.dynamic_slice(rw2, (gs_,), (group,))
+        # Window origin from the *in-strip* tap positions only (far
+        # out-of-detector voxels would otherwise drag the window off
+        # the contributing taps; their own one-hots are zero either
+        # way).
+        r0g = jnp.clip(jnp.min(jnp.clip(rr, 0, band - 1)),
+                       0, band - gband)
+        c0g = jnp.clip(jnp.min(jnp.clip(cc, 0, width - 1)),
+                       0, width - gwidth)
+        win = read_window(r0g, c0g)
+        rowsel = ((biota == (rr - r0g)[:, None]).astype(jnp.float32)
+                  * (1.0 - syg[:, None])
+                  + (biota == (rr - r0g)[:, None] + 1).astype(
+                      jnp.float32) * syg[:, None])
+        colsel = ((wiota == (cc - c0g)[:, None]).astype(jnp.float32)
+                  * (1.0 - sxg[:, None])
+                  + (wiota == (cc - c0g)[:, None] + 1).astype(
+                      jnp.float32) * sxg[:, None])
+        mix = jax.lax.dot_general(
+            rowsel, win.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)          # (group, gwidth)
+        val = jnp.sum(mix * colsel, axis=1) * wg
+        update(gs_ // chunk, (g % cols_per_row) * group, val)
+        return 0
+
+    jax.lax.fori_loop(0, n_groups, one_group, 0)
+
+
 def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
                              strip_ref, sem,
                              *, o_mm, n_u, n_v, ty, chunk, band, width,
@@ -251,58 +318,18 @@ def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
             sem)
         copy.start()
 
-        fx = jnp.floor(ix)
-        fy = jnp.floor(iy)
-        sx = (ix - fx).reshape(ty * chunk)
-        sy = (iy - fy).reshape(ty * chunk)
-        rel_r = (fy.astype(jnp.int32) + 1 - r0).reshape(ty * chunk)
-        rel_c = (fx.astype(jnp.int32) + 1 - c0).reshape(ty * chunk)
-        rw2 = (r * r).reshape(ty * chunk)
-
-        copy.wait()
-        n_groups = (ty * chunk) // group
-        cols_per_row = chunk // group
-
-        biota = jax.lax.broadcasted_iota(jnp.int32, (group, gband), 1)
-        wiota = jax.lax.broadcasted_iota(jnp.int32, (group, gwidth), 1)
-
-        def one_group(g, _):
-            gs_ = g * group
-            rr = jax.lax.dynamic_slice(rel_r, (gs_,), (group,))
-            cc = jax.lax.dynamic_slice(rel_c, (gs_,), (group,))
-            sxg = jax.lax.dynamic_slice(sx, (gs_,), (group,))
-            syg = jax.lax.dynamic_slice(sy, (gs_,), (group,))
-            wg = jax.lax.dynamic_slice(rw2, (gs_,), (group,))
-            # Window origin from the *in-strip* tap positions only (far
-            # out-of-detector voxels would otherwise drag the window off
-            # the contributing taps; their own one-hots are zero either
-            # way).
-            r0g = jnp.clip(jnp.min(jnp.clip(rr, 0, band - 1)),
-                           0, band - gband)
-            c0g = jnp.clip(jnp.min(jnp.clip(cc, 0, width - 1)),
-                           0, width - gwidth)
-            win = strip_ref[pl.ds(r0g, gband), pl.ds(c0g, gwidth)]
-            rowsel = ((biota == (rr - r0g)[:, None]).astype(jnp.float32)
-                      * (1.0 - syg[:, None])
-                      + (biota == (rr - r0g)[:, None] + 1).astype(
-                          jnp.float32) * syg[:, None])
-            colsel = ((wiota == (cc - c0g)[:, None]).astype(jnp.float32)
-                      * (1.0 - sxg[:, None])
-                      + (wiota == (cc - c0g)[:, None] + 1).astype(
-                          jnp.float32) * sxg[:, None])
-            mix = jax.lax.dot_general(
-                rowsel, win.astype(jnp.float32),
-                (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)      # (group, gwidth)
-            val = jnp.sum(mix * colsel, axis=1) * wg
-            row = gs_ // chunk
-            col = (g % cols_per_row) * group
+        def update(row, col, val):
             cur = vol_in_ref[0, row, pl.ds(col, group)]
             vol_out_ref[0, row, pl.ds(col, group)] = \
                 cur + val.astype(vol_in_ref.dtype)
-            return 0
 
-        jax.lax.fori_loop(0, n_groups, one_group, 0)
+        _micro_tile_accumulate(
+            copy.wait,
+            lambda r0g, c0g: strip_ref[pl.ds(r0g, gband),
+                                       pl.ds(c0g, gwidth)],
+            update, ix, iy, r, r0=r0, c0=c0, ty=ty, chunk=chunk,
+            band=band, width=width, group=group, gband=gband,
+            gwidth=gwidth)
 
     @pl.when(jnp.logical_not(active))
     def _():
@@ -312,16 +339,22 @@ def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
 def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
                           strip_ref, sems,
                           *, o_mm, n_u, n_v, ty, chunk, band, width,
-                          grid_dims):
+                          grid_dims, depth=2):
     """Double-buffered variant: the strip DMA for grid step ``k+1`` is
-    issued before step ``k``'s compute (hillclimb CT-3).
+    issued before step ``k``'s compute (hillclimb CT-3), generalised to
+    a ``depth``-slot rotation running ``depth - 1`` fetches ahead.
 
     KNC had no usable gather prefetch (the paper found
     ``vgatherpf0dps`` blocking and scalar prefetch too expensive,
-    section 6.4); on TPU the strip origin is *computed* geometry, so the
-    next tile's DMA can be launched exactly one step ahead into the
-    other half of a (2, band, width) scratch — compute and DMA overlap
-    with zero extra instructions on the critical path.
+    section 6.4); on TPU the strip origin is *computed* geometry, so
+    future tiles' DMAs can be launched any number of steps ahead into a
+    ``(depth, band, width)`` scratch — compute and DMA overlap with
+    zero extra instructions on the critical path.  Step 0 primes the
+    first ``depth - 1`` fetches; step ``k`` then issues the fetch for
+    step ``k + depth - 1`` (whose slot was drained at step ``k - 1``)
+    and waits on its own — the same rotation ledger as the batched
+    :func:`backproject_kernel_batch_db` at ``pbatch = 1``, so a tuned
+    ``db_depth`` means one thing on both paths.
 
     Both the prefetch *and* this step's own strip address come from the
     corner-based :func:`_strip_origin` (the full Part-1 pass previously
@@ -334,7 +367,8 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
     yb = pl.program_id(1)
     cb = pl.program_id(2)
     step = (z * ny + yb) * nc + cb
-    slot = jax.lax.rem(step, 2)
+    total = nz * ny * nc
+    slot = jax.lax.rem(step, depth)
 
     pad_rows = img_ref.shape[0]
     pad_cols = img_ref.shape[1]
@@ -347,9 +381,15 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
             chunk=chunk, band=band, width=width, pad_rows=pad_rows,
             pad_cols=pad_cols)
 
-    def start_dma(r0, c0, s):
+    def start_dma(t):
+        cn = jax.lax.rem(t, nc)
+        rest = jax.lax.div(t, nc)
+        yn = jax.lax.rem(rest, ny)
+        zn = jax.lax.div(rest, ny)
+        r0n, c0n = origin(zn, yn, cn)
+        s = jax.lax.rem(t, depth)
         pltpu.make_async_copy(
-            img_ref.at[pl.ds(r0, band), pl.ds(c0, width)],
+            img_ref.at[pl.ds(r0n, band), pl.ds(c0n, width)],
             strip_ref.at[s], sems.at[s]).start()
 
     ix, iy, w, r = _part1_tile(A, o_mm, z, (yb * ty).astype(jnp.float32),
@@ -357,23 +397,16 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
     active = _tile_active(ix, iy, w, n_u, n_v)
     r0, c0 = origin(z, yb, cb)
 
-    # First step primes its own slot.
+    # First step primes the whole lookahead window.
     @pl.when(step == 0)
     def _():
-        start_dma(r0, c0, slot)
+        for d in range(min(depth - 1, total)):
+            start_dma(jnp.int32(d))
 
-    # Prefetch the next tile's strip into the other slot.
-    nxt = step + 1
-    last = nz * ny * nc - 1
-
-    @pl.when(step < last)
+    # Refill the slot step-1 just drained with step + depth - 1's strip.
+    @pl.when(step + (depth - 1) < total)
     def _():
-        cn = jax.lax.rem(nxt, nc)
-        rest = jax.lax.div(nxt, nc)
-        yn = jax.lax.rem(rest, ny)
-        zn = jax.lax.div(rest, ny)
-        r0n, c0n = origin(zn, yn, cn)
-        start_dma(r0n, c0n, 1 - slot)
+        start_dma(step + (depth - 1))
 
     def wait_strip():
         pltpu.make_async_copy(
@@ -399,34 +432,24 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
         vol_out_ref[...] = vol_in_ref[...]
 
 
-def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
-                             strip_ref, acc_ref, sems,
-                             *, o_mm, n_u, n_v, ty, chunk, band, width,
-                             pbatch):
-    """Projection-batched grid step: the ``(1, ty, chunk)`` volume tile
-    stays resident in VMEM while an in-kernel ``fori_loop`` folds in
-    ``pbatch`` projections — the inverted loop nest (DESIGN.md §7).
+def _batch_strip_loop(A_ref, imgs_ref, strip_ref, sems, consume, *,
+                      o_mm, n_u, n_v, ty, chunk, band, width, pbatch,
+                      z, y0, x0):
+    """The per-projection strip pipeline the plain and micro batch
+    kernels share — one DMA ledger, two compute schemes.
 
-    Refs: ``A_ref`` stacked ``(pbatch, 3, 4)`` f32 in SMEM; ``imgs_ref``
-    stacked zero-padded projections ``(pbatch, rows, cols)`` in ANY/HBM;
-    ``vol_in/out`` aliased volume tile; ``strip_ref`` ``(2, band,
-    width)`` VMEM scratch; ``acc_ref`` ``(ty, chunk)`` f32 accumulator;
-    ``sems`` 2 DMA semaphores.
-
-    The volume tile is loaded once and stored once per ``pbatch``
-    projections — volume HBM traffic drops by the batch factor versus
-    the per-projection kernels.  The per-projection strip DMAs are
-    double-buffered *across the projection loop*: projection ``p+1``'s
-    strip (address from the corner-based :func:`_strip_origin`) is in
-    flight while ``p``'s contribution computes — the CT-3 trick applied
-    where it pays most.  Every projection's strip is DMA'd and waited
-    unconditionally (clamped origins are always in-bounds) so the
-    semaphores balance; off-detector projections contribute zero through
-    the all-zero one-hot rows and the ``r²`` mask.
+    Per in-kernel projection ``p``: projection ``p+1``'s strip (address
+    from the corner-based :func:`_strip_origin`) is prefetched into the
+    other half of a 2-slot rotation while ``p``'s contribution computes
+    — the CT-3 trick applied where it pays most.  Every projection's
+    strip is DMA'd and waited unconditionally (clamped origins are
+    always in-bounds) so the semaphores balance; off-detector
+    projections contribute zero through the all-zero one-hot rows and
+    the ``r²`` mask.  ``consume(slot, wait_strip, ix, iy, r, r0, c0)``
+    runs under the active flag and folds projection ``p``'s
+    contribution into the caller's accumulator (calling ``wait_strip``
+    once its selectors are built, so the copy overlaps them).
     """
-    z = pl.program_id(0)
-    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
-    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
     pad_rows = imgs_ref.shape[1]
     pad_cols = imgs_ref.shape[2]
 
@@ -441,7 +464,6 @@ def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
             imgs_ref.at[p, pl.ds(r0, band), pl.ds(c0, width)],
             strip_ref.at[slot], sems.at[slot]).start()
 
-    acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
     r0_first, c0_first = origin(0)
     start_dma(0, r0_first, c0_first, 0)
 
@@ -471,6 +493,157 @@ def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
 
         @pl.when(active)
         def _():
+            consume(slot, wait_strip, ix, iy, r, r0, c0)
+
+        @pl.when(jnp.logical_not(active))
+        def _():
+            wait_strip()               # balance the unconditional DMA
+
+        return (r0n, c0n)
+
+    jax.lax.fori_loop(0, pbatch, body, (r0_first, c0_first))
+
+
+def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
+                             strip_ref, acc_ref, sems,
+                             *, o_mm, n_u, n_v, ty, chunk, band, width,
+                             pbatch):
+    """Projection-batched grid step: the ``(1, ty, chunk)`` volume tile
+    stays resident in VMEM while an in-kernel ``fori_loop`` folds in
+    ``pbatch`` projections — the inverted loop nest (DESIGN.md §7).
+
+    Refs: ``A_ref`` stacked ``(pbatch, 3, 4)`` f32 in SMEM; ``imgs_ref``
+    stacked zero-padded projections ``(pbatch, rows, cols)`` in ANY/HBM;
+    ``vol_in/out`` aliased volume tile; ``strip_ref`` ``(2, band,
+    width)`` VMEM scratch; ``acc_ref`` ``(ty, chunk)`` f32 accumulator;
+    ``sems`` 2 DMA semaphores.
+
+    The volume tile is loaded once and stored once per ``pbatch``
+    projections — volume HBM traffic drops by the batch factor versus
+    the per-projection kernels.  The strip DMA discipline lives in
+    :func:`_batch_strip_loop` (shared with the micro variant).
+    """
+    z = pl.program_id(0)
+    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
+    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
+
+    acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
+
+    def consume(slot, wait_strip, ix, iy, r, r0, c0):
+        def strip():
+            wait_strip()
+            return strip_ref[slot]
+
+        acc_ref[...] += _tile_contrib(
+            strip, ix, iy, r, r0, c0, ty=ty, chunk=chunk, band=band,
+            width=width)
+
+    _batch_strip_loop(A_ref, imgs_ref, strip_ref, sems, consume,
+                      o_mm=o_mm, n_u=n_u, n_v=n_v, ty=ty, chunk=chunk,
+                      band=band, width=width, pbatch=pbatch, z=z, y0=y0,
+                      x0=x0)
+    vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
+
+
+def backproject_kernel_batch_db(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
+                                strip_ref, acc_ref, sems,
+                                *, o_mm, n_u, n_v, ty, chunk, band, width,
+                                pbatch, depth, grid_dims):
+    """Deep-pipelined batched grid step: the strip DMA stream runs
+    ``depth - 1`` fetches ahead of compute through a ``depth``-slot
+    rotation, across *both* the in-kernel projection ``fori_loop`` and
+    the plane/tile grid loop.
+
+    The plain batch kernel's pipeline drains at every grid-step
+    boundary: projection 0 of tile ``k+1`` only starts its DMA once tile
+    ``k`` is fully folded, so each of the ``nz·ny·nc`` steps eats one
+    cold strip latency.  Here every strip fetch lives on one global
+    sequence ``t = step·pbatch + p``; iteration ``t`` issues the DMA for
+    ``t + depth - 1`` (its target slot was consumed at iteration
+    ``t - 1``, so the rotation never overwrites a live strip) and the
+    strip addresses of *future tiles* are plain geometry via the
+    corner-based :func:`_strip_origin` — nothing about a tile has to be
+    resident to prefetch for it.  ``depth=2`` is the classical double
+    buffer without the per-step drain; deeper pipelines keep more
+    fetches in flight (the ROADMAP's "in-flight depth > 2" item), which
+    pays once a single strip latency exceeds one projection's compute.
+
+    Refs as :func:`backproject_kernel_batch`, except ``strip_ref`` is
+    ``(depth, band, width)`` and ``sems`` ``depth`` DMA semaphores.
+    Issue/wait counts balance by construction: exactly one DMA is
+    issued and one waited per sequence index (`t < total` guards both
+    ends), and every wait recomputes the same origin the issuer used.
+    """
+    nz, ny, nc = grid_dims
+    z = pl.program_id(0)
+    yb = pl.program_id(1)
+    cb = pl.program_id(2)
+    step = (z * ny + yb) * nc + cb
+    t0 = step * pbatch
+    total = nz * ny * nc * pbatch
+    y0 = (yb * ty).astype(jnp.float32)
+    x0 = (cb * chunk).astype(jnp.float32)
+    pad_rows = imgs_ref.shape[1]
+    pad_cols = imgs_ref.shape[2]
+
+    def origin(A, zi, yi, xi):
+        return _strip_origin(A, o_mm, zi, yi, xi, n_u=n_u, n_v=n_v, ty=ty,
+                             chunk=chunk, band=band, width=width,
+                             pad_rows=pad_rows, pad_cols=pad_cols)
+
+    def start_dma(t):
+        """Issue the strip fetch for global sequence index ``t`` —
+        decode (tile, projection), compute the corner origin, copy into
+        slot ``t % depth``."""
+        s = jax.lax.div(t, pbatch)
+        p = jax.lax.rem(t, pbatch)
+        cn = jax.lax.rem(s, nc)
+        rest = jax.lax.div(s, nc)
+        yn = jax.lax.rem(rest, ny)
+        zn = jax.lax.div(rest, ny)
+        r0, c0 = origin(_read_A(A_ref, p), zn,
+                        (yn * ty).astype(jnp.float32),
+                        (cn * chunk).astype(jnp.float32))
+        slot = jax.lax.rem(t, depth)
+        pltpu.make_async_copy(
+            imgs_ref.at[p, pl.ds(r0, band), pl.ds(c0, width)],
+            strip_ref.at[slot], sems.at[slot]).start()
+
+    # The first step primes the whole lookahead window; later steps
+    # inherit their leading strips from their predecessors' prefetches.
+    @pl.when(step == 0)
+    def _():
+        for d in range(min(depth - 1, total)):
+            start_dma(jnp.int32(d))
+
+    acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
+
+    def body(p, _):
+        t = t0 + p
+        # Refill the slot iteration t-1 just drained with strip
+        # t + depth - 1 (possibly a future tile's) before this
+        # iteration's compute, so the copy overlaps it.
+        @pl.when(t + (depth - 1) < total)
+        def _():
+            start_dma(t + (depth - 1))
+
+        A = _read_A(A_ref, p)
+        ix, iy, w, r = _part1_tile(A, o_mm, z, y0, x0, ty, chunk)
+        active = _tile_active(ix, iy, w, n_u, n_v)
+        # t always belongs to *this* tile, so its origin is current-tile
+        # geometry — the issuer (iteration t - depth + 1) computed the
+        # identical corner origin, producer and consumer agreeing by
+        # construction.
+        r0, c0 = origin(A, z, y0, x0)
+        slot = jax.lax.rem(t, depth)
+
+        def wait_strip():
+            pltpu.make_async_copy(
+                imgs_ref.at[p, pl.ds(r0, band), pl.ds(c0, width)],
+                strip_ref.at[slot], sems.at[slot]).wait()
+
+        @pl.when(active)
+        def _():
             def strip():
                 wait_strip()
                 return strip_ref[slot]
@@ -482,24 +655,63 @@ def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
         @pl.when(jnp.logical_not(active))
         def _():
             wait_strip()               # balance the unconditional DMA
+        return 0
 
-        return (r0n, c0n)
+    jax.lax.fori_loop(0, pbatch, body, 0)
+    vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
-    jax.lax.fori_loop(0, pbatch, body, (r0_first, c0_first))
+
+def backproject_kernel_batch_micro(A_ref, imgs_ref, vol_in_ref,
+                                   vol_out_ref, strip_ref, acc_ref, sems,
+                                   *, o_mm, n_u, n_v, ty, chunk, band,
+                                   width, pbatch, group, gband, gwidth):
+    """Micro-window batched grid step: the volume tile stays resident
+    across the in-kernel projection loop exactly as in
+    :func:`backproject_kernel_batch` (same strip DMA double-buffering,
+    same corner-based origins), but Parts 2+3 run per ``group``-voxel
+    ``(gband, gwidth)`` micro-window through the shared
+    :func:`_micro_tile_accumulate` — the CT-5 flop cut applied on top of
+    the §7 traffic cut, so the tuner's fastest single-projection compute
+    scheme no longer has to give up the batched path's volume locality.
+    """
+    z = pl.program_id(0)
+    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
+    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
+
+    acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
+
+    def consume(slot, wait_strip, ix, iy, r, r0, c0):
+        def update(row, col, val):
+            cur = acc_ref[row, pl.ds(col, group)]
+            acc_ref[row, pl.ds(col, group)] = cur + val
+
+        _micro_tile_accumulate(
+            wait_strip,
+            lambda r0g, c0g: strip_ref[slot, pl.ds(r0g, gband),
+                                       pl.ds(c0g, gwidth)],
+            update, ix, iy, r, r0=r0, c0=c0, ty=ty, chunk=chunk,
+            band=band, width=width, group=group, gband=gband,
+            gwidth=gwidth)
+
+    _batch_strip_loop(A_ref, imgs_ref, strip_ref, sems, consume,
+                      o_mm=o_mm, n_u=n_u, n_v=n_v, ty=ty, chunk=chunk,
+                      band=band, width=width, pbatch=pbatch, z=z, y0=y0,
+                      x0=x0)
     vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
 
 def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
                               ty=8, chunk=128, band=16, width=512,
-                              double_buffer=False, micro=False,
-                              micro_group=8, micro_band=8,
+                              double_buffer=False, db_depth=2,
+                              micro=False, micro_group=8, micro_band=8,
                               micro_width=32, interpret=False):
     """``pallas_call`` wrapper: one projection into the whole volume.
 
     ``volume``: (L, L, L) f32; ``padded_img``: zero-padded projection,
     row/col counts already rounded up by ops.py so ``band``/``width``
     slices always fit.  Returns the updated volume (input aliased).
-    ``double_buffer=True`` selects the DMA-prefetching variant (CT-3);
+    ``double_buffer=True`` selects the DMA-prefetching variant (CT-3;
+    ``db_depth`` slots in rotation, same ledger as the batched variant);
     ``micro=True`` the per-group micro-window compute (CT-5).
 
     (``micro_band`` used to default to 4 — the same silent tap-drop
@@ -512,6 +724,10 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
     grid = (L, L // ty, L // chunk)
 
     vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
+    if micro and double_buffer:
+        raise ValueError(
+            "kernel variants are exclusive: got micro=True and "
+            "double_buffer=True; a tuned decision names exactly one")
     if micro:
         kernel = functools.partial(
             backproject_kernel_micro, o_mm=o_mm, n_u=n_u, n_v=n_v,
@@ -521,12 +737,18 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
                    pltpu.SemaphoreType.DMA]
         name = "backproject_strip_micro"
     elif double_buffer:
+        depth = int(db_depth)
+        if depth < 2:
+            raise ValueError(
+                f"db_depth={db_depth}: the pipelined kernel needs an "
+                f"in-flight slot rotation of at least 2")
         kernel = functools.partial(
             backproject_kernel_db, o_mm=o_mm, n_u=n_u, n_v=n_v,
-            ty=ty, chunk=chunk, band=band, width=width, grid_dims=grid)
-        scratch = [pltpu.VMEM((2, band, width), padded_img.dtype),
-                   pltpu.SemaphoreType.DMA((2,))]
-        name = "backproject_strip_db"
+            ty=ty, chunk=chunk, band=band, width=width, grid_dims=grid,
+            depth=depth)
+        scratch = [pltpu.VMEM((depth, band, width), padded_img.dtype),
+                   pltpu.SemaphoreType.DMA((depth,))]
+        name = f"backproject_strip_db{depth}"
     else:
         kernel = functools.partial(
             backproject_kernel, o_mm=o_mm, n_u=n_u, n_v=n_v,
@@ -554,7 +776,10 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
 
 def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
                                     n_u, n_v, ty=8, chunk=128, band=16,
-                                    width=512, interpret=False):
+                                    width=512, double_buffer=False,
+                                    db_depth=2, micro=False, micro_group=8,
+                                    micro_band=8, micro_width=32,
+                                    interpret=False):
     """``pallas_call`` wrapper: one *batch* of projections into the whole
     volume, volume tile resident across the in-kernel projection loop.
 
@@ -564,6 +789,14 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
     aliased).  Volume HBM traffic per call: one load + one store of
     ``L³`` — a ``pbatch``× cut versus ``pbatch`` calls of
     :func:`backproject_volume_pallas`.
+
+    Variants mirror the single-projection wrapper: ``micro=True``
+    selects the per-group micro-window compute (CT-5) on the batched
+    nest; ``double_buffer=True`` the deep DMA pipeline
+    (:func:`backproject_kernel_batch_db`, ``db_depth`` slots in
+    rotation, in-flight depth ``db_depth - 1`` across the plane loop).
+    The variants are exclusive — asking for both raises rather than
+    silently preferring one, because a tuned decision named exactly one.
     """
     L = volume.shape[0]
     pbatch = int(A_stack.shape[0])
@@ -572,9 +805,34 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
     grid = (L, L // ty, L // chunk)
 
     vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
-    kernel = functools.partial(
-        backproject_kernel_batch, o_mm=o_mm, n_u=n_u, n_v=n_v,
-        ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch)
+    if micro and double_buffer:
+        raise ValueError(
+            "batch kernel variants are exclusive: got micro=True and "
+            "double_buffer=True; a tuned decision names exactly one")
+    if micro:
+        kernel = functools.partial(
+            backproject_kernel_batch_micro, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch,
+            group=micro_group, gband=micro_band, gwidth=micro_width)
+        n_slots = 2
+        name = f"backproject_strip_batch_micro_p{pbatch}"
+    elif double_buffer:
+        n_slots = int(db_depth)
+        if n_slots < 2:
+            raise ValueError(
+                f"db_depth={db_depth}: the pipelined batch kernel needs "
+                f"an in-flight slot rotation of at least 2")
+        kernel = functools.partial(
+            backproject_kernel_batch_db, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch,
+            depth=n_slots, grid_dims=grid)
+        name = f"backproject_strip_batch_db{n_slots}_p{pbatch}"
+    else:
+        kernel = functools.partial(
+            backproject_kernel_batch, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch)
+        n_slots = 2
+        name = f"backproject_strip_batch_p{pbatch}"
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -586,11 +844,11 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
         out_specs=vol_spec,
         out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
         scratch_shapes=[
-            pltpu.VMEM((2, band, width), padded_imgs.dtype),
+            pltpu.VMEM((n_slots, band, width), padded_imgs.dtype),
             pltpu.VMEM((ty, chunk), jnp.float32),
-            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((n_slots,)),
         ],
         input_output_aliases={2: 0},
         interpret=interpret,
-        name=f"backproject_strip_batch_p{pbatch}",
+        name=name,
     )(A_stack, padded_imgs, volume)

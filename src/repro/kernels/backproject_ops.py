@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import functools
 import hashlib
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -123,26 +122,27 @@ def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
 @functools.partial(
     jax.jit,
     static_argnames=("gs", "ty", "chunk", "band", "width",
-                     "double_buffer", "micro", "micro_group", "micro_band",
-                     "micro_width", "interpret"))
+                     "double_buffer", "db_depth", "micro", "micro_group",
+                     "micro_band", "micro_width", "interpret"))
 def _run(volume, image, A, gs: GeomStatic, ty, chunk, band, width,
-         double_buffer, micro, micro_group, micro_band, micro_width,
-         interpret):
+         double_buffer, db_depth, micro, micro_group, micro_band,
+         micro_width, interpret):
     padded = _pad_up(image, band, width)
     return backproject_volume_pallas(
         volume, padded, A,
         o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
         ty=ty, chunk=chunk, band=band, width=width,
-        double_buffer=double_buffer, micro=micro, micro_group=micro_group,
-        micro_band=micro_band, micro_width=micro_width,
-        interpret=interpret)
+        double_buffer=double_buffer, db_depth=db_depth, micro=micro,
+        micro_group=micro_group, micro_band=micro_band,
+        micro_width=micro_width, interpret=interpret)
 
 
 def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
                            *, ty: int = 8, chunk: int = 128, band: int = 16,
                            width: int = 512, double_buffer: bool = False,
-                           micro: bool = False, micro_group: int = 8,
-                           micro_band: int = 8, micro_width: int = 32,
+                           db_depth: int = 2, micro: bool = False,
+                           micro_group: int = 8, micro_band: int = 8,
+                           micro_width: int = 32,
                            interpret: bool | None = None,
                            validate: bool = False,
                            strategy: str = "fixed"):
@@ -153,12 +153,16 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
     (cheap; recommended once per geometry) — with ``micro=True`` it also
     checks the ``(micro_band, micro_width)`` group window, the hazard
     that made ``micro_band=4`` silently drop taps.  ``double_buffer=True``
-    overlaps strip DMA with compute (hillclimb CT-3).
+    overlaps strip DMA with compute (hillclimb CT-3), ``db_depth`` slots
+    in rotation.
 
     ``strategy="auto"`` pulls the tile parameters (``ty``/``chunk``/
-    ``band``/``width``/``double_buffer``/``micro``) from the autotuner
-    cache (:mod:`repro.tune`) for this geometry/backend/device; when the
-    key was never tuned the explicitly passed parameters stand.
+    ``band``/``width``/``double_buffer``/``db_depth``/``micro``) from
+    the autotuner cache (:mod:`repro.tune`) for this geometry/backend/
+    device; when the key was never tuned the explicitly passed
+    parameters stand.  (``pbatch`` is the one tuned key with no
+    single-projection meaning — there is nothing to batch here; batch
+    callers resolve it through :func:`pallas_backproject_batch`.)
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
     if strategy == "auto":
@@ -171,6 +175,10 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
             band = int(tuned.get("band", band))
             width = int(tuned.get("width", width))
             double_buffer = bool(tuned.get("double_buffer", double_buffer))
+            # A tuned pipeline decision was timed at a specific depth;
+            # resolve it with the flag (same rotation ledger on the
+            # single-projection kernel as on the batched one).
+            db_depth = int(tuned.get("db_depth", db_depth))
             micro = bool(tuned.get("micro", micro))
             # The tuned micro decision was validated at a specific
             # window; resolve the whole window, not just the flag.
@@ -195,8 +203,8 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
         interpret = not _on_tpu()
     return _run(jnp.asarray(volume), jnp.asarray(image),
                 jnp.asarray(A, jnp.float32), gs, ty, chunk, band, width,
-                double_buffer, micro, micro_group, micro_band, micro_width,
-                interpret)
+                double_buffer, int(db_depth), micro, micro_group,
+                micro_band, micro_width, interpret)
 
 
 def _pad_up_stack(images, band: int, width: int):
@@ -214,9 +222,11 @@ def _pad_up_stack(images, band: int, width: int):
 @functools.partial(
     jax.jit,
     static_argnames=("gs", "ty", "chunk", "band", "width", "pbatch",
-                     "interpret"))
+                     "double_buffer", "db_depth", "micro", "micro_group",
+                     "micro_band", "micro_width", "interpret"))
 def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
-                 width, pbatch, interpret):
+                 width, pbatch, double_buffer, db_depth, micro,
+                 micro_group, micro_band, micro_width, interpret):
     from repro.core.backproject import _stream_batches
 
     padded = _pad_up_stack(images, band, width)
@@ -225,7 +235,9 @@ def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
         return backproject_volume_pallas_batch(
             vol, imgs, A, o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
             ty=ty, chunk=chunk, band=band, width=width,
-            interpret=interpret)
+            double_buffer=double_buffer, db_depth=db_depth, micro=micro,
+            micro_group=micro_group, micro_band=micro_band,
+            micro_width=micro_width, interpret=interpret)
 
     return _stream_batches(padded, mats, volume, pbatch, call)
 
@@ -241,6 +253,10 @@ def pallas_backproject_batch(volume, images, mats,
                              chunk: int = 128, band: int = 16,
                              width: int = 512,
                              pbatch: int = DEFAULT_PBATCH,
+                             double_buffer: bool = False,
+                             db_depth: int = 2, micro: bool = False,
+                             micro_group: int = 8, micro_band: int = 8,
+                             micro_width: int = 32,
                              interpret: bool | None = None,
                              validate: bool = True,
                              strategy: str = "fixed"):
@@ -253,11 +269,19 @@ def pallas_backproject_batch(volume, images, mats,
     ``n_proj`` is chunked into ``pbatch``-sized batches inside one jit
     (a ``pbatch ∤ n_proj`` remainder runs as one final smaller batch).
     Every projection's footprint is validated against the host planner
-    by default (memoised per problem); pass ``validate=False`` only when
-    the exact (geometry, matrices, tile) triple was already validated.
+    by default (memoised per problem) — with ``micro=True`` the
+    ``(micro_band, micro_width)`` group window included; pass
+    ``validate=False`` only when the exact (geometry, matrices, tile)
+    triple was already validated.
 
-    ``strategy="auto"`` pulls ``ty``/``chunk``/``band``/``width`` *and*
-    ``pbatch`` from the autotuner cache for this key.
+    ``double_buffer=True`` selects the deep DMA pipeline
+    (``db_depth``-slot rotation crossing the plane loop, DESIGN.md §9);
+    ``micro=True`` the per-group micro-window compute.  ``strategy=
+    "auto"`` pulls the full tuned surface — ``ty``/``chunk``/``band``/
+    ``width``, ``pbatch``, *and* the ``double_buffer``/``db_depth``/
+    ``micro``/``micro_*`` variant flags — from the autotuner cache for
+    this key: every tuned decision now runs the kernel it was timed on,
+    and an impossible combination raises instead of being shed.
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
     if strategy == "auto":
@@ -270,23 +294,28 @@ def pallas_backproject_batch(volume, images, mats,
             band = int(tuned.get("band", band))
             width = int(tuned.get("width", width))
             pbatch = int(tuned.get("pbatch", pbatch))
-            ignored = [k for k in ("double_buffer", "micro")
-                       if tuned.get(k)]
-            if ignored:
-                # The batch kernel supports neither variant; running
-                # anyway is correct (plain batch path) but NOT the
-                # configuration the tuner validated and timed — say so
-                # loudly instead of silently shedding the tuned flags.
-                warnings.warn(
-                    f"pallas_backproject_batch ignores tuned "
-                    f"{'/'.join(ignored)} for this geometry: the batch "
-                    f"kernel has no such variant, so the run will not "
-                    f"match the tuned decision's performance profile",
-                    RuntimeWarning, stacklevel=2)
+            double_buffer = bool(tuned.get("double_buffer", double_buffer))
+            db_depth = int(tuned.get("db_depth", db_depth))
+            micro = bool(tuned.get("micro", micro))
+            # A tuned micro decision was validated at a specific window;
+            # resolve the whole window, not just the flag.
+            micro_group = int(tuned.get("micro_group", micro_group))
+            micro_band = int(tuned.get("micro_band", micro_band))
+            micro_width = int(tuned.get("micro_width", micro_width))
     elif strategy != "fixed":
         raise ValueError(
             f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
+    if micro and double_buffer:
+        raise ValueError(
+            "batch kernel variants are exclusive: got micro=True and "
+            "double_buffer=True; a tuned decision names exactly one")
+    if double_buffer and int(db_depth) < 2:
+        raise ValueError(
+            f"db_depth={db_depth}: the pipelined batch kernel needs an "
+            f"in-flight slot rotation of at least 2")
     ty, chunk, band, width = clamp_tiles(gs, ty, chunk, band, width)
+    micro_band = min(micro_band, band)
+    micro_width = min(micro_width, width)
     images = jnp.asarray(images)
     mats_f32 = jnp.asarray(mats, jnp.float32)
     n_proj = int(images.shape[0])
@@ -295,16 +324,22 @@ def pallas_backproject_batch(volume, images, mats,
         if isinstance(geom, GeomStatic):
             raise ValueError("validate=True needs the full Geometry")
         mats64 = np.asarray(mats, np.float64).reshape(-1, 3, 4)
-        key = (gs, ty, chunk, band, width,
+        key = (gs, ty, chunk, band, width, micro,
+               (micro_group, micro_band, micro_width) if micro else None,
                hashlib.sha1(mats64.tobytes()).hexdigest())
         if key not in _VALIDATED_STACKS:
             for A in mats64:
                 validate_strip_config(geom, A, ty=ty, chunk=chunk,
-                                      band=band, width=width)
+                                      band=band, width=width, micro=micro,
+                                      micro_group=micro_group,
+                                      micro_band=micro_band,
+                                      micro_width=micro_width)
             if len(_VALIDATED_STACKS) >= 4096:
                 _VALIDATED_STACKS.clear()
             _VALIDATED_STACKS.add(key)
     if interpret is None:
         interpret = not _on_tpu()
     return _run_batched(jnp.asarray(volume), images, mats_f32, gs, ty,
-                        chunk, band, width, pbatch, interpret)
+                        chunk, band, width, pbatch, double_buffer,
+                        int(db_depth), micro, micro_group, micro_band,
+                        micro_width, interpret)

@@ -38,17 +38,23 @@ DEFAULT_STRATEGY = "strip2"
 
 # Bumped whenever the persisted TunedConfig layout or the semantics of a
 # tuned decision change (v2: the ``pbatch`` axis — a v1 decision timed
-# the per-projection loop nest, which no longer exists).  ``load_tuned``
-# treats any other version as untuned, so stale ``.repro_tune/`` files
-# are *ignored*, never misread into the new dataclass.
-TUNE_SCHEMA_VERSION = 2
+# the per-projection loop nest, which no longer exists; v3: batched
+# kernel candidates carry ``double_buffer``/``db_depth``/``micro`` and
+# the batch path *honors* them — a v2 decision's variant flags were
+# timed against a batch path that silently shed them, so replaying one
+# would misattribute its numbers).  ``load_tuned`` treats any other
+# version as untuned, so stale ``.repro_tune/`` files are *ignored*,
+# never misread into the new dataclass.
+TUNE_SCHEMA_VERSION = 3
 
 # ``micro_*`` ride along with ``micro``: a tuned micro decision was
 # validated (and timed) at a specific ``(micro_band, micro_width)``
 # window — resolving the flag without the window would run the kernel at
-# defaults it was never validated at.
-_PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer", "micro",
-                "micro_group", "micro_band", "micro_width", "pbatch")
+# defaults it was never validated at.  ``db_depth`` likewise rides with
+# ``double_buffer``: the depth is part of the timed pipeline shape.
+_PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer",
+                "db_depth", "micro", "micro_group", "micro_band",
+                "micro_width", "pbatch")
 
 # Options each jnp strategy actually accepts — caller options riding
 # along with strategy="auto" are filtered to the *resolved* strategy, so

@@ -36,18 +36,19 @@ _PBATCHES = (1, 4)
 
 def pallas_batch_fits_vmem(gs: GeomStatic, *, pbatch: int, ty: int,
                            chunk: int, band: int, width: int,
-                           itemsize: int = 4) -> bool:
+                           depth: int = 2, itemsize: int = 4) -> bool:
     """Conservative VMEM budget check for a batched kernel candidate.
 
-    Counts every in-flight projection strip at full ``pbatch`` depth
-    (the double-buffered kernel holds 2, but a deeper pipeline or an
-    ANY-space promotion may keep more resident), the aliased volume tile
-    pair plus the f32 accumulator, and the one-hot selector temporaries
-    ``rowsel (ty·chunk, band)`` / ``colsel (ty·chunk, width)``.  A
-    candidate that fails here is never proposed — an OOM'd sweep point
-    would abort the whole tune run on device.
+    Counts every in-flight projection strip at full ``pbatch`` depth or
+    the DMA pipeline's ``depth``-slot rotation, whichever is larger
+    (the plain batch kernel holds 2 slots, the pipelined variant
+    ``db_depth``, and an ANY-space promotion may keep more resident),
+    the aliased volume tile pair plus the f32 accumulator, and the
+    one-hot selector temporaries ``rowsel (ty·chunk, band)`` / ``colsel
+    (ty·chunk, width)``.  A candidate that fails here is never proposed
+    — an OOM'd sweep point would abort the whole tune run on device.
     """
-    strips = pbatch * band * width * itemsize
+    strips = max(pbatch, depth) * band * width * itemsize
     tile = 3 * ty * chunk * 4
     onehot = ty * chunk * (band + width) * 4
     return strips + tile + onehot <= _VMEM_BUDGET_BYTES
@@ -120,21 +121,39 @@ def pallas_candidates(gs: GeomStatic,
                       ) -> list[Candidate]:
     """Kernel variants at a geometry-clamped base tile: plain /
     double-buffer / micro per-projection, plus the projection-batched
-    kernel at every ``pbatch`` depth that fits the VMEM budget."""
+    kernel crossed ``pbatch × {plain, db, micro}`` at every depth that
+    fits the VMEM budget — the batch path honors the full tuned config
+    surface, so every variant competes at every batch depth.  The
+    deepest fitting ``pbatch`` also proposes a 4-deep DMA rotation
+    (``db_depth=4``), the ROADMAP's "in-flight depth > 2" point.
+    """
     base = dict(ty=min(8, gs.L), chunk=min(32, gs.L), band=16, width=128)
+    micro_win = dict(micro=True, micro_group=min(8, gs.L), micro_band=8,
+                     micro_width=32)
     cands = [
         Candidate.of("pallas", **base),
         Candidate.of("pallas", double_buffer=True, **base),
         # The micro candidate names its window explicitly so the values
         # it is validated and timed at are the values that persist into
         # the TunedConfig — resolving ``micro=True`` without them would
-        # run windows the sweep never saw.
-        Candidate.of("pallas", micro=True, micro_group=min(8, gs.L),
-                     micro_band=8, micro_width=32, **base),
+        # run windows the sweep never saw.  Same for ``db_depth`` with
+        # ``double_buffer``.
+        Candidate.of("pallas", **micro_win, **base),
     ]
-    for pb in pbatches:
-        if pb > 1 and pallas_batch_fits_vmem(gs, pbatch=pb, **base):
-            cands.append(Candidate.of("pallas", pbatch=pb, **base))
+    batched = [pb for pb in pbatches
+               if pb > 1 and pallas_batch_fits_vmem(gs, pbatch=pb, **base)]
+    for pb in batched:
+        cands.append(Candidate.of("pallas", pbatch=pb, **base))
+        cands.append(Candidate.of("pallas", pbatch=pb, double_buffer=True,
+                                  db_depth=2, **base))
+        cands.append(Candidate.of("pallas", pbatch=pb, **micro_win,
+                                  **base))
+    if batched:
+        pb = max(batched)
+        if pallas_batch_fits_vmem(gs, pbatch=pb, depth=4, **base):
+            cands.append(Candidate.of("pallas", pbatch=pb,
+                                      double_buffer=True, db_depth=4,
+                                      **base))
     return cands
 
 

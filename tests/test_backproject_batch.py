@@ -173,6 +173,97 @@ def test_pallas_batch_border_rays():
     assert (np.asarray(ref) == 0.0).any() and (np.asarray(ref) != 0.0).any()
 
 
+@pytest.mark.parametrize("variant", [
+    dict(double_buffer=True, db_depth=2),
+    dict(double_buffer=True, db_depth=3),
+    dict(micro=True),
+], ids=["db2", "db3", "micro"])
+@pytest.mark.parametrize("pbatch", [2, 5])   # 5 % 2 != 0: remainder batch
+def test_pallas_batch_variants_match_ref(ct_case, variant, pbatch):
+    """Interpret-mode parity of the db (depth 2 and deeper) and micro
+    batch variants against the per-projection oracle, full-divisor and
+    remainder depths."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    out = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4, chunk=16,
+                                   band=16, width=128, pbatch=pbatch,
+                                   **variant)
+    np.testing.assert_allclose(np.asarray(out), _pallas_ref(filt, mats, 5),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_batch_db_bitwise_vs_plain(ct_case):
+    """The DMA pipeline moves *when* strips are fetched, never what is
+    computed: every depth's result is bit-for-bit the plain batch
+    kernel's (same contributions, same accumulation order)."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    plain = np.asarray(pallas_backproject_batch(
+        vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+        pbatch=2))
+    for depth in (2, 3, 4):
+        db = np.asarray(pallas_backproject_batch(
+            vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+            pbatch=2, double_buffer=True, db_depth=depth))
+        np.testing.assert_array_equal(db, plain)
+
+
+@pytest.mark.parametrize("variant", [
+    dict(double_buffer=True, db_depth=3),
+    dict(micro=True),
+], ids=["db3", "micro"])
+def test_pallas_batch_variants_border_rays(variant):
+    """Zero-outside semantics of both new variants across an in-kernel
+    projection loop with a pbatch remainder on edge-straddling rays."""
+    geom = Geometry().scaled(16, n_proj=8, n_u=24, n_v=18)
+    rng = np.random.default_rng(3)
+    imgs = rng.standard_normal((3, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = np.stack([projection_matrix(geom, th)
+                     for th in (0.7, 1.1, 2.9)]).astype(np.float32)
+    vol0 = jnp.zeros((geom.L,) * 3, jnp.float32)
+    ref = vol0
+    for k in range(3):
+        ref = backproject_one(ref, imgs[k], mats[k], geom,
+                              strategy="scalar")
+    out = pallas_backproject_batch(vol0, imgs, mats, geom, ty=8, chunk=16,
+                                   band=16, width=128, pbatch=2, **variant)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(ref) == 0.0).any() and (np.asarray(ref) != 0.0).any()
+
+
+def test_pallas_batch_variant_flags_are_loud(ct_case):
+    """Impossible variant combinations raise instead of silently
+    preferring one: both variants at once, and a sub-2 pipeline depth."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    with pytest.raises(ValueError, match="exclusive"):
+        pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4, chunk=16,
+                                 band=16, width=128, pbatch=2, micro=True,
+                                 double_buffer=True)
+    with pytest.raises(ValueError, match="db_depth"):
+        pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4, chunk=16,
+                                 band=16, width=128, pbatch=2,
+                                 double_buffer=True, db_depth=1)
+
+
+def test_pallas_batch_micro_window_is_loud_or_correct():
+    """The batch micro path runs the same planner-backed window check as
+    the single-projection kernel: an undersized ``(micro_band,
+    micro_width)`` raises before any device work (L=48 is where a 4-row
+    window loses taps, tests/test_kernel_backproject.py)."""
+    geom = Geometry().scaled(48, n_proj=2)
+    rng = np.random.default_rng(7)
+    imgs = rng.standard_normal(
+        (geom.n_proj, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = np.asarray(projection_matrices(geom), np.float32)
+    vol0 = jnp.zeros((48,) * 3, jnp.float32)
+    with pytest.raises(ValueError, match="micro window"):
+        pallas_backproject_batch(vol0, imgs, mats, geom, ty=8, chunk=48,
+                                 band=32, width=256, pbatch=2, micro=True,
+                                 micro_band=4)
+
+
 def test_pallas_batch_validates_stack(ct_case):
     """Undersized strips are rejected for *every* projection of the
     stack before any device work."""
@@ -203,6 +294,95 @@ def test_pallas_batch_auto_uses_tuned_pbatch(ct_case, tmp_path,
     out_fix = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4,
                                        chunk=16, band=16, width=128,
                                        pbatch=2)
+    clear_memory_cache()
+    np.testing.assert_array_equal(np.asarray(out_auto),
+                                  np.asarray(out_fix))
+
+
+def _write_cache_file(tmp_path, pallas, version):
+    """A raw on-disk tune-cache JSON (the path a fresh process resolves
+    through), bypassing store_tuned so the version field is exactly what
+    the test says it is."""
+    import json
+    import os
+    from pathlib import Path
+
+    from repro.tune import cache_key, device_identity
+
+    backend, device_kind = device_identity()
+    d = Path(os.environ["REPRO_TUNE_DIR"])
+    d.mkdir(parents=True, exist_ok=True)
+    doc = {"strategy": "strip2", "opts": {}, "backend": backend,
+           "device_kind": device_kind, "us_per_call": 1.0,
+           "pallas": pallas, "pallas_us": 1.0, "timings": [],
+           "version": version}
+    (d / f"{cache_key(GS, backend, device_kind)}.json").write_text(
+        json.dumps(doc))
+
+
+@pytest.mark.parametrize("variant", [
+    {"double_buffer": True, "db_depth": 3},
+    {"micro": True, "micro_group": 8, "micro_band": 8, "micro_width": 32},
+], ids=["db", "micro"])
+def test_tuned_batch_flags_resolve_from_v3_cache_file(ct_case, tmp_path,
+                                                      monkeypatch,
+                                                      variant):
+    """A v3 cache file carrying ``double_buffer``/``micro`` redirects
+    the batch path to the matching variant — bit-for-bit against both
+    the explicit variant call and the plain batch kernel — and the old
+    shed-the-flag warning never fires (warnings are errors here)."""
+    import warnings
+
+    from repro.tune import TUNE_SCHEMA_VERSION, clear_memory_cache
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    tiles = {"ty": 4, "chunk": 16, "band": 16, "width": 128}
+    _write_cache_file(tmp_path, {**tiles, "pbatch": 2, **variant},
+                      TUNE_SCHEMA_VERSION)
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        out_auto = pallas_backproject_batch(vol0, filt, mats, GEOM,
+                                            strategy="auto")
+    out_fix = pallas_backproject_batch(vol0, filt, mats, GEOM, pbatch=2,
+                                       **tiles, **variant)
+    plain = pallas_backproject_batch(vol0, filt, mats, GEOM, pbatch=2,
+                                     **tiles)
+    clear_memory_cache()
+    np.testing.assert_array_equal(np.asarray(out_auto),
+                                  np.asarray(out_fix))
+    # Neither variant changes the arithmetic, only its schedule — the
+    # pipeline moves fetches, the micro window drops only identically-
+    # zero one-hot terms.
+    np.testing.assert_array_equal(np.asarray(out_auto), np.asarray(plain))
+
+
+def test_v2_cache_file_is_ignored_not_misread(ct_case, tmp_path,
+                                              monkeypatch):
+    """A v2-era cache file (its variant flags were timed against a batch
+    path that shed them) must read as *untuned* — auto falls back to the
+    caller's parameters, bit-for-bit, with no warning."""
+    import warnings
+
+    from repro.tune import clear_memory_cache, load_tuned
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    _write_cache_file(tmp_path, {"ty": 4, "chunk": 16, "band": 16,
+                                 "width": 128, "pbatch": 2,
+                                 "double_buffer": True}, version=2)
+    assert load_tuned(GS) is None
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        out_auto = pallas_backproject_batch(vol0, filt, mats, GEOM,
+                                            ty=4, chunk=16, band=16,
+                                            width=128, strategy="auto")
+    out_fix = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4,
+                                       chunk=16, band=16, width=128)
     clear_memory_cache()
     np.testing.assert_array_equal(np.asarray(out_auto),
                                   np.asarray(out_fix))

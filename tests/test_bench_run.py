@@ -180,6 +180,25 @@ def test_regression_gate_skips_noise_rows_and_compares_latest(tmp_path):
                            "--threshold", "4.0", "--min-us", "200"])
 
 
+def test_regression_gate_noise_floor_is_symmetric(tmp_path, capsys):
+    """Sub-floor medians are incomparable noise in *both* directions: a
+    fresh row above the floor must never fail against a sub-floor
+    baseline (the ratio is all baseline jitter), and a sub-floor fresh
+    row against an above-floor baseline is skipped, not scored."""
+    from benchmarks import check_regression
+
+    base, fresh = tmp_path / "base.json", tmp_path / "fresh.json"
+    _traj(base, {"fig1/a": 150.0,       # sub-floor baseline
+                 "fig1/b": 1000.0})     # above-floor baseline
+    _traj(fresh, {"fig1/a": 4000.0,     # 26x "regression" vs noise
+                  "fig1/b": 80.0})      # sub-floor fresh
+    check_regression.main(["--baseline", str(base), "--fresh", str(fresh),
+                           "--threshold", "2.5", "--min-us", "200"])
+    out = capsys.readouterr().out
+    assert "no regressions" in out
+    assert "compared 0 row(s)" in out
+
+
 def test_regression_gate_vacuous_without_matching_identity(tmp_path,
                                                            capsys):
     from benchmarks import check_regression

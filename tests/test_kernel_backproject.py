@@ -45,9 +45,12 @@ def test_kernel_shape_sweep(L, ty, chunk, band, width):
 
 
 @pytest.mark.parametrize("variant", [{"double_buffer": True},
+                                     {"double_buffer": True,
+                                      "db_depth": 4},
                                      {"micro": True}])
 def test_kernel_variants_match_oracle(variant):
-    """CT-3 double-buffer and CT-5 micro-window vs the oracle."""
+    """CT-3 double-buffer (classical and deep rotation) and CT-5
+    micro-window vs the oracle."""
     geom, filt, mats = _problem(32, n_proj=4)
     gs = GeomStatic.of(geom)
     vol0 = jnp.zeros((32,) * 3, jnp.float32)
@@ -60,6 +63,8 @@ def test_kernel_variants_match_oracle(variant):
 
 
 @pytest.mark.parametrize("variant", [{}, {"double_buffer": True},
+                                     {"double_buffer": True,
+                                      "db_depth": 3},
                                      {"micro": True}])
 def test_kernel_variants_border_rays_vs_scalar_oracle(variant):
     """Interpret-mode parity of all three variants on the border-ray
@@ -155,6 +160,18 @@ def test_micro_window_is_loud_or_correct():
         vol0, image, A, geom, ty=8, chunk=48, band=32, width=256,
         micro=True, validate=True))
     np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_variants_are_exclusive():
+    """micro + double_buffer on the single-projection path raises like
+    the batch path does — a tuned decision names exactly one variant,
+    so silently preferring either would misattribute its numbers."""
+    geom, filt, mats = _problem(16)
+    vol0 = jnp.zeros((16,) * 3, jnp.float32)
+    with pytest.raises(ValueError, match="exclusive"):
+        pallas_backproject_one(vol0, filt[0], mats[0], geom, ty=4,
+                               chunk=16, band=16, width=128, micro=True,
+                               double_buffer=True)
 
 
 def test_micro_group_must_divide_chunk():

@@ -236,10 +236,11 @@ def test_pallas_auto_resolves_full_micro_window(ct_case):
                                   np.asarray(out_fix))
 
 
-def test_pallas_batch_warns_on_ignored_tuned_flags(ct_case):
-    """The batch kernel has no double_buffer/micro variant; silently
-    shedding a tuned flag misrepresents the tuned decision — it must
-    warn loudly."""
+def test_pallas_batch_auto_honors_tuned_variant_flags(ct_case):
+    """The batch path runs the kernel a tuned decision was timed on:
+    ``double_buffer``/``db_depth`` resolve to the pipelined batch
+    variant — bitwise against the explicit call, with no shed-the-flag
+    warning left anywhere (warnings are errors here)."""
     import warnings
 
     from repro.kernels.backproject_ops import pallas_backproject_batch
@@ -251,15 +252,72 @@ def test_pallas_batch_warns_on_ignored_tuned_flags(ct_case):
                       device_kind=device_kind, us_per_call=1.0,
                       pallas={"ty": 8, "chunk": 16, "band": 16,
                               "width": 128, "double_buffer": True,
-                              "pbatch": 2})
+                              "db_depth": 3, "pbatch": 2})
     store_tuned(GS, cfg)
-    with pytest.warns(RuntimeWarning, match="ignores tuned"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
         out = pallas_backproject_batch(vol0, filt, mats, GEOM,
                                        strategy="auto")
-    # Correctness is unaffected — only the perf profile differs.
     ref = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=8, chunk=16,
-                                   band=16, width=128, pbatch=2)
+                                   band=16, width=128, pbatch=2,
+                                   double_buffer=True, db_depth=3)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_pallas_one_auto_resolves_tuned_db_depth(ct_case):
+    """The single-projection path resolves ``db_depth`` with the
+    ``double_buffer`` flag (the depth is part of the timed pipeline
+    shape, and both paths share one rotation ledger).  The result is
+    schedule-invariant, so the honoring is proven through the depth
+    validation: a tuned sub-2 depth reaches the kernel selection and
+    raises there."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    img, A = jnp.asarray(filt[0]), jnp.asarray(mats[0])
+    backend, device_kind = device_identity()
+    pallas = {"ty": 8, "chunk": 16, "band": 16, "width": 128,
+              "double_buffer": True, "db_depth": 4}
+    store_tuned(GS, TunedConfig(strategy="strip2", opts={},
+                                backend=backend, device_kind=device_kind,
+                                us_per_call=1.0, pallas=pallas))
+    out_auto = pallas_backproject_one(vol0, img, A, GEOM, strategy="auto")
+    out_fix = pallas_backproject_one(vol0, img, A, GEOM, ty=8, chunk=16,
+                                     band=16, width=128,
+                                     double_buffer=True, db_depth=4)
+    np.testing.assert_array_equal(np.asarray(out_auto),
+                                  np.asarray(out_fix))
+
+    clear_memory_cache()
+    store_tuned(GS, TunedConfig(strategy="strip2", opts={},
+                                backend=backend, device_kind=device_kind,
+                                us_per_call=1.0,
+                                pallas={**pallas, "db_depth": 1}))
+    with pytest.raises(ValueError, match="db_depth"):
+        pallas_backproject_one(vol0, img, A, GEOM, strategy="auto")
+
+
+def test_pallas_batch_candidates_cross_variants():
+    """The batched candidate family spans pbatch × {plain, db, micro},
+    every variant-bearing candidate naming its full surface (db_depth /
+    micro window) so the timed values are the persisted values, and
+    deep-rotation candidates pass the depth-aware VMEM check."""
+    from repro.tune.space import pallas_batch_fits_vmem, pallas_candidates
+
+    cands = [dict(c.opts) for c in pallas_candidates(GS)]
+    batched = [c for c in cands if c.get("pbatch", 1) > 1]
+    assert any(c.get("double_buffer") for c in batched)
+    assert any(c.get("micro") for c in batched)
+    assert any(not c.get("double_buffer") and not c.get("micro")
+               for c in batched)
+    for c in batched:
+        if c.get("double_buffer"):
+            assert c["db_depth"] >= 2
+            assert pallas_batch_fits_vmem(
+                GS, pbatch=c["pbatch"], ty=c["ty"], chunk=c["chunk"],
+                band=c["band"], width=c["width"], depth=c["db_depth"])
+        if c.get("micro"):
+            assert {"micro_group", "micro_band", "micro_width"} <= set(c)
+        assert not (c.get("double_buffer") and c.get("micro"))
 
 
 def test_sharded_reconstruct_auto(ct_case):
