@@ -61,6 +61,16 @@ def run(L: int | None = None):
              f"gups={n_proj * L ** 3 / t / 1e9:.4f} L={L} pbatch={pb} "
              f"nproj={n_proj}")
 
+    # bf16 on the wire at the default batch depth: identical tap
+    # semantics at half the strip bytes (f32 accumulate; DESIGN.md §10).
+    pb16 = min(4, n_proj)
+    t = time_fn(reconstruct, filt, mats, geom, strategy="strip2",
+                pbatch=pb16, strip_dtype="bfloat16", warmup=1, iters=2,
+                **STRATEGY_OPTS["strip2"])
+    emit("fig1/strip2_bf16", t * 1e6,
+         f"gups={n_proj * L ** 3 / t / 1e9:.4f} L={L} pbatch={pb16} "
+         f"nproj={n_proj}")
+
     # Batched kernel variants: full n_proj stack per call through the
     # Pallas batch path, db (depth-2 rotation) and micro-window compute.
     # A smaller volume keeps interpret-mode (off-TPU) rows tractable;
@@ -73,7 +83,11 @@ def run(L: int | None = None):
     for pb in sorted({min(pb, n_proj) for pb in KERNEL_PBATCHES}):
         for tag, flags in (("batch_db", dict(double_buffer=True,
                                              db_depth=2)),
-                           ("batch_micro", dict(micro=True))):
+                           ("batch_micro", dict(micro=True)),
+                           ("batch_shared", dict(shared_window=True)),
+                           ("batch_shared_bf16",
+                            dict(shared_window=True,
+                                 strip_dtype="bfloat16"))):
             # A wider sampling window than the 50 ms default: these rows
             # feed the tightened regression gate, and interpret-mode
             # medians over ~10 samples drift with host contention.

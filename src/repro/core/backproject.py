@@ -60,6 +60,7 @@ __all__ = [
     "sample_onehot",
     "sample_strip",
     "sample_strip2",
+    "strip_wire_dtype",
     "contribution",
     "accumulate",
     "backproject_plane",
@@ -72,6 +73,27 @@ __all__ = [
 ]
 
 STRATEGIES = ("scalar", "gather", "onehot", "strip", "strip2")
+
+# Wire dtypes the strip strategies (and the Pallas kernels) may carry
+# strip data in.  ``None`` means "leave the image dtype alone" — the
+# float32 path must stay bitwise-identical to the pre-option code, so it
+# never inserts so much as a no-op ``astype``.  bf16 halves strip HBM/
+# VMEM bytes; the one-hot interpolation always upcasts the window back
+# to f32 and accumulates in f32, so the only quality loss is the bf16
+# rounding of the strip values themselves (~8 mantissa bits).
+_STRIP_WIRE_DTYPES = {"float32": None, "bfloat16": jnp.bfloat16}
+
+
+def strip_wire_dtype(strip_dtype: str):
+    """Map a ``strip_dtype`` option to a jnp dtype (``None`` = f32
+    passthrough).  Raises ``ValueError`` on unknown names — a typo'd
+    dtype must never silently run the f32 path."""
+    try:
+        return _STRIP_WIRE_DTYPES[str(strip_dtype)]
+    except KeyError:
+        raise ValueError(
+            f"unknown strip_dtype {strip_dtype!r}; want one of "
+            f"{tuple(_STRIP_WIRE_DTYPES)}") from None
 
 # Projections folded into the volume per volume pass when the caller does
 # not say otherwise (untuned ``pbatch``).  Each pass streams the L^3
@@ -245,7 +267,8 @@ def _strip_bounds(idx, lo_clip, hi_clip, pad_origin_max):
 
 def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
                  band: int = 16, width: int = 512,
-                 strips_per_block: int = 64):
+                 strips_per_block: int = 64,
+                 strip_dtype: str = "float32"):
     """Structured block loads: the fastrabbit "pairwise loads" analogue.
 
     Voxel lines are cut into x-chunks; per chunk one contiguous
@@ -255,7 +278,15 @@ def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
     coordinate (exact: no monotonicity assumption needed in-graph), so all
     contributing taps are in-band by construction; out-of-band one-hot rows
     are identically zero, preserving exact zero-outside semantics.
+
+    ``strip_dtype="bfloat16"`` carries the strips on the wire in bf16
+    (halving strip bytes); the one-hot mix upcasts back to f32 and
+    accumulates in f32, so only the tap *values* are rounded.  The
+    default f32 path is bitwise-identical to the pre-option code.
     """
+    wire = strip_wire_dtype(strip_dtype)
+    if wire is not None:
+        padded = padded.astype(wire)
     L = gs.L
     assert ix.shape == (L, L)
     chunk = _divisor_at_most(L, chunk)
@@ -290,8 +321,14 @@ def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
                       + (biota == rreli[:, None] + 1) * syi[:, None])
             colsel = ((wiota == creli[:, None]) * (1.0 - sxi[:, None])
                       + (wiota == creli[:, None] + 1) * sxi[:, None])
-            rowmix = rowsel.astype(padded.dtype) @ strip   # (chunk, width)
-            return jnp.sum(rowmix * colsel, axis=-1)
+            if wire is None:
+                rowmix = rowsel.astype(padded.dtype) @ strip
+            else:                       # f32 weights x bf16 strip -> f32
+                rowmix = jax.lax.dot_general(
+                    rowsel, strip.astype(jnp.float32),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            return jnp.sum(rowmix * colsel, axis=-1)       # (chunk, width)
 
         return jax.vmap(one)(r0b, c0b, rrel, crel, sxb, syb)
 
@@ -305,7 +342,8 @@ def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
 
 def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
                   gband: int = 8, gwidth: int = 64,
-                  groups_per_block: int = 512):
+                  groups_per_block: int = 512,
+                  strip_dtype: str = "float32"):
     """Two-level micro-window sampling (beyond-paper; Pallas kernel scheme).
 
     Refines ``strip``: per *group* of 8 voxels, a tiny
@@ -319,7 +357,13 @@ def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
     planner-backed :func:`validate_strip_opts` check.  (``gband`` used to
     default to 4, which silently dropped taps for standard RabbitCT-scaled
     geometries at L>=48; 8 covers every geometry in the repo's sweeps.)
+
+    ``strip_dtype="bfloat16"``: bf16 windows on the wire, f32 upcast at
+    the one-hot mix, f32 accumulate (see :func:`sample_strip`).
     """
+    wire = strip_wire_dtype(strip_dtype)
+    if wire is not None:
+        padded = padded.astype(wire)
     L = gs.L
     group = _divisor_at_most(L, group)
     ng = L // group
@@ -349,8 +393,14 @@ def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
                       + (biota == rreli[:, None] + 1) * syi[:, None])
             colsel = ((wiota == creli[:, None]) * (1.0 - sxi[:, None])
                       + (wiota == creli[:, None] + 1) * sxi[:, None])
-            rowmix = rowsel.astype(padded.dtype) @ win     # (group, gwidth)
-            return jnp.sum(rowmix * colsel, axis=-1)
+            if wire is None:
+                rowmix = rowsel.astype(padded.dtype) @ win
+            else:                       # f32 weights x bf16 win -> f32
+                rowmix = jax.lax.dot_general(
+                    rowsel, win.astype(jnp.float32),
+                    (((1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.float32)
+            return jnp.sum(rowmix * colsel, axis=-1)       # (group, gwidth)
 
         return jax.vmap(one)(r0b, c0b, rrel, crel, sxb, syb)
 

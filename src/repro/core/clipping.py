@@ -46,6 +46,7 @@ __all__ = [
     "line_clip_exact",
     "line_clip_conservative",
     "plan_strips",
+    "shared_window_requirement",
 ]
 
 # Margin (pixels) added around the analytic tap bounds: one for the floor()
@@ -290,3 +291,45 @@ def _round8(v: int) -> int:
 
 def _round128(v: int) -> int:
     return max(128, (v + 127) // 128 * 128)
+
+
+def shared_window_requirement(geom: Geometry, matrices, *, ty: int,
+                              chunk: int, pbatch: int) -> tuple[int, int]:
+    """Superset-window dims covering a whole projection group per tile.
+
+    The shared-window batch kernel DMAs ONE ``(pbatch, band, width)``
+    window slab per ``(z, ty-lines, x-chunk)`` volume tile, anchored at
+    the elementwise minimum of the group members' strip origins.  For
+    that window to cover every member's taps, its dims must span the
+    group's origin scatter — across the ``ty`` merged lines (as in the
+    per-projection ``validate_strip_config`` check) *and* across the
+    ``pbatch`` projections of the group.
+
+    Groups mirror the batch drivers' chunking (``_stream_batches``):
+    full ``pbatch`` groups from index 0 plus one smaller remainder
+    group.  Returns the tight ``(need_band, need_width)`` maxima over
+    all groups and tiles; callers must use a window at least that large
+    or taps silently drop — same loud-or-correct contract as
+    :func:`plan_strips` consumers.
+    """
+    mats = np.asarray(matrices, np.float64).reshape(-1, 3, 4)
+    L = geom.L
+    assert L % ty == 0 and L % chunk == 0, (L, ty, chunk)
+    plans = [plan_strips(geom, A, chunk=chunk) for A in mats]
+    need_band = need_width = 0
+    for g0 in range(0, len(plans), pbatch):
+        grp = plans[g0:g0 + pbatch]
+        r0 = np.stack([p.r0.astype(np.int64) for p in grp])
+        c0 = np.stack([p.c0.astype(np.int64) for p in grp])
+        rb = max(p.required_band for p in grp)
+        rw = max(p.required_width for p in grp)
+        # Merge over group members (axis 0) and the ty lines a volume
+        # tile spans (axis 3 after the reshape) — the kernel serves all
+        # of them from one window.
+        gr = r0.reshape(len(grp), L, L // ty, ty, -1)
+        gc = c0.reshape(len(grp), L, L // ty, ty, -1)
+        span_r = gr.max(axis=(0, 3)) - gr.min(axis=(0, 3)) + rb
+        span_c = gc.max(axis=(0, 3)) - gc.min(axis=(0, 3)) + rw
+        need_band = max(need_band, int(span_r.max()))
+        need_width = max(need_width, int(span_c.max()))
+    return need_band, need_width

@@ -46,6 +46,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["backproject_kernel", "backproject_kernel_batch",
            "backproject_kernel_batch_db", "backproject_kernel_batch_micro",
+           "backproject_kernel_batch_shared",
            "backproject_volume_pallas", "backproject_volume_pallas_batch"]
 
 _EPS_W = 1e-6
@@ -700,6 +701,68 @@ def backproject_kernel_batch_micro(A_ref, imgs_ref, vol_in_ref,
     vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
 
+def backproject_kernel_batch_shared(A_ref, imgs_ref, vol_in_ref,
+                                    vol_out_ref, win_ref, acc_ref, sem,
+                                    *, o_mm, n_u, n_v, ty, chunk, band,
+                                    width, pbatch):
+    """Shared-superset-window batched grid step: ONE window DMA per
+    (volume tile, projection group) instead of ``pbatch`` strip fetches.
+
+    Adjacent angles' strips over one tile overlap heavily, so the group
+    is served from a single superset window anchored at the elementwise
+    *minimum* of the members' corner origins (:func:`_strip_origin` per
+    projection; each is already clamped in-bounds, so the minimum is
+    too).  The DMA moves a ``(pbatch, band, width)`` slab — same total
+    pixel area only when the members coincide, but always a ``pbatch``×
+    cut in DMA *descriptors*, and strictly fewer bytes than ``pbatch``
+    fetches of the same ``(band, width)`` whenever the superset dims are
+    tighter than ``pbatch`` disjoint windows would need.  Coverage is
+    NOT checked here: ops.py sizes/validates ``(band, width)`` against
+    the host planner's :func:`repro.core.clipping
+    .shared_window_requirement` — an undersized window would drop taps
+    silently, so the wrapper raises before this kernel ever runs.
+
+    Refs as :func:`backproject_kernel_batch`, except the scratch is one
+    ``(pbatch, band, width)`` window slab and a single DMA semaphore.
+    """
+    z = pl.program_id(0)
+    y0 = (pl.program_id(1) * ty).astype(jnp.float32)
+    x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
+    pad_rows = imgs_ref.shape[1]
+    pad_cols = imgs_ref.shape[2]
+
+    r0s = c0s = None
+    for p in range(pbatch):
+        r0p, c0p = _strip_origin(
+            _read_A(A_ref, p), o_mm, z, y0, x0, n_u=n_u, n_v=n_v, ty=ty,
+            chunk=chunk, band=band, width=width, pad_rows=pad_rows,
+            pad_cols=pad_cols)
+        r0s = r0p if r0s is None else jnp.minimum(r0s, r0p)
+        c0s = c0p if c0s is None else jnp.minimum(c0s, c0p)
+
+    copy = pltpu.make_async_copy(
+        imgs_ref.at[pl.ds(0, pbatch), pl.ds(r0s, band), pl.ds(c0s, width)],
+        win_ref, sem)
+    copy.start()
+    acc_ref[...] = vol_in_ref[0].astype(jnp.float32)   # overlaps the DMA
+    copy.wait()
+
+    def body(p, _):
+        ix, iy, w, r = _part1_tile(_read_A(A_ref, p), o_mm, z, y0, x0,
+                                   ty, chunk)
+        active = _tile_active(ix, iy, w, n_u, n_v)
+
+        @pl.when(active)
+        def _():
+            acc_ref[...] += _tile_contrib(
+                lambda: win_ref[p], ix, iy, r, r0s, c0s, ty=ty,
+                chunk=chunk, band=band, width=width)
+        return 0
+
+    jax.lax.fori_loop(0, pbatch, body, 0)
+    vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
+
+
 def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
                               ty=8, chunk=128, band=16, width=512,
                               double_buffer=False, db_depth=2,
@@ -779,6 +842,7 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
                                     width=512, double_buffer=False,
                                     db_depth=2, micro=False, micro_group=8,
                                     micro_band=8, micro_width=32,
+                                    shared_window=False,
                                     interpret=False):
     """``pallas_call`` wrapper: one *batch* of projections into the whole
     volume, volume tile resident across the in-kernel projection loop.
@@ -794,8 +858,11 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
     selects the per-group micro-window compute (CT-5) on the batched
     nest; ``double_buffer=True`` the deep DMA pipeline
     (:func:`backproject_kernel_batch_db`, ``db_depth`` slots in
-    rotation, in-flight depth ``db_depth - 1`` across the plane loop).
-    The variants are exclusive — asking for both raises rather than
+    rotation, in-flight depth ``db_depth - 1`` across the plane loop);
+    ``shared_window=True`` the one-DMA-per-group superset-window scheme
+    (:func:`backproject_kernel_batch_shared` — here ``band``/``width``
+    are the *superset* dims ops.py sized against the group planner).
+    The variants are exclusive — asking for two raises rather than
     silently preferring one, because a tuned decision named exactly one.
     """
     L = volume.shape[0]
@@ -805,10 +872,34 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
     grid = (L, L // ty, L // chunk)
 
     vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
-    if micro and double_buffer:
+    if micro and double_buffer or shared_window and (micro or double_buffer):
         raise ValueError(
-            "batch kernel variants are exclusive: got micro=True and "
-            "double_buffer=True; a tuned decision names exactly one")
+            f"batch kernel variants are exclusive: got micro={micro}, "
+            f"double_buffer={double_buffer}, shared_window="
+            f"{shared_window}; a tuned decision names exactly one")
+    if shared_window:
+        kernel = functools.partial(
+            backproject_kernel_batch_shared, o_mm=o_mm, n_u=n_u, n_v=n_v,
+            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch)
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                vol_spec,
+            ],
+            out_specs=vol_spec,
+            out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
+            scratch_shapes=[
+                pltpu.VMEM((pbatch, band, width), padded_imgs.dtype),
+                pltpu.VMEM((ty, chunk), jnp.float32),
+                pltpu.SemaphoreType.DMA,
+            ],
+            input_output_aliases={2: 0},
+            interpret=interpret,
+            name=f"backproject_strip_batch_shared_p{pbatch}",
+        )(A_stack, padded_imgs, volume)
     if micro:
         kernel = functools.partial(
             backproject_kernel_batch_micro, o_mm=o_mm, n_u=n_u, n_v=n_v,

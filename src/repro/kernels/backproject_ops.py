@@ -17,15 +17,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backproject import DEFAULT_PBATCH, GeomStatic
-from repro.core.clipping import plan_strips
+from repro.core.backproject import (DEFAULT_PBATCH, GeomStatic,
+                                    strip_wire_dtype)
+from repro.core.clipping import (_round8, _round128, plan_strips,
+                                 shared_window_requirement)
 from repro.core.geometry import Geometry
 
 from .backproject import (backproject_volume_pallas,
                           backproject_volume_pallas_batch)
 
 __all__ = ["pallas_backproject_one", "pallas_backproject_batch",
-           "validate_strip_config", "clamp_tiles"]
+           "validate_strip_config", "shared_window_dims", "clamp_tiles"]
 
 
 def _on_tpu() -> bool:
@@ -47,17 +49,22 @@ def clamp_tiles(gs: GeomStatic, ty: int, chunk: int, band: int,
     return ty, chunk, band, width
 
 
-def _pad_up(image, band: int, width: int):
+def _pad_up(image, band: int, width: int, dtype=None):
     """1-pixel zero border, then round rows/cols up to slice-safe sizes.
 
-    Rows are rounded to a multiple of 8 (sublane tile) and cols to a
-    multiple of 128 (lane tile), and at least (band, width), so any
-    clamped ``(band, width)`` dynamic slice stays in-bounds and
-    hardware-aligned.
+    Rows are rounded to a multiple of the sublane tile (8 for f32, 16
+    for 2-byte wire dtypes) and cols to a multiple of 128 (lane tile),
+    and at least (band, width), so any clamped ``(band, width)`` dynamic
+    slice stays in-bounds and hardware-aligned.  ``dtype`` casts the
+    image to the strip wire dtype *before* padding (``None`` leaves the
+    dtype — and the f32 bits — untouched).
     """
+    if dtype is not None:
+        image = image.astype(dtype)
+    sub = 16 if image.dtype.itemsize == 2 else 8
     n_v, n_u = image.shape
     rows = max(band, n_v + 2)
-    rows += (-rows) % 8
+    rows += (-rows) % sub
     cols = max(width, n_u + 2)
     cols += (-cols) % 128
     return jnp.pad(image, ((1, rows - n_v - 1), (1, cols - n_u - 1)))
@@ -123,11 +130,12 @@ def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
     jax.jit,
     static_argnames=("gs", "ty", "chunk", "band", "width",
                      "double_buffer", "db_depth", "micro", "micro_group",
-                     "micro_band", "micro_width", "interpret"))
+                     "micro_band", "micro_width", "strip_dtype",
+                     "interpret"))
 def _run(volume, image, A, gs: GeomStatic, ty, chunk, band, width,
          double_buffer, db_depth, micro, micro_group, micro_band,
-         micro_width, interpret):
-    padded = _pad_up(image, band, width)
+         micro_width, strip_dtype, interpret):
+    padded = _pad_up(image, band, width, strip_wire_dtype(strip_dtype))
     return backproject_volume_pallas(
         volume, padded, A,
         o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
@@ -143,10 +151,17 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
                            db_depth: int = 2, micro: bool = False,
                            micro_group: int = 8, micro_band: int = 8,
                            micro_width: int = 32,
+                           strip_dtype: str = "float32",
                            interpret: bool | None = None,
                            validate: bool = False,
                            strategy: str = "fixed"):
     """Add one projection to ``volume`` using the Pallas kernel.
+
+    ``strip_dtype="bfloat16"`` carries the padded projection (and so
+    every strip DMA and the VMEM scratch) in bf16; the kernels already
+    upcast the window to f32 at the one-hot matmul and accumulate in
+    f32, so only the tap values are rounded.  The f32 default path is
+    bitwise-unchanged.
 
     ``interpret=None`` auto-selects: compiled on TPU, interpreter
     elsewhere.  ``validate=True`` runs the host planner check first
@@ -185,9 +200,11 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
             micro_group = int(tuned.get("micro_group", micro_group))
             micro_band = int(tuned.get("micro_band", micro_band))
             micro_width = int(tuned.get("micro_width", micro_width))
+            strip_dtype = str(tuned.get("strip_dtype", strip_dtype))
     elif strategy != "fixed":
         raise ValueError(
             f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
+    strip_wire_dtype(strip_dtype)   # loud on typos, before any tracing
     ty, chunk, band, width = clamp_tiles(gs, ty, chunk, band, width)
     micro_band = min(micro_band, band)
     micro_width = min(micro_width, width)
@@ -204,15 +221,19 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
     return _run(jnp.asarray(volume), jnp.asarray(image),
                 jnp.asarray(A, jnp.float32), gs, ty, chunk, band, width,
                 double_buffer, int(db_depth), micro, micro_group,
-                micro_band, micro_width, interpret)
+                micro_band, micro_width, strip_dtype, interpret)
 
 
-def _pad_up_stack(images, band: int, width: int):
+def _pad_up_stack(images, band: int, width: int, dtype=None):
     """The stacked analogue of :func:`_pad_up`: pad the whole projection
-    stack once (1-pixel zero border + slice-safe round-up)."""
+    stack once (1-pixel zero border + slice-safe round-up; ``dtype``
+    casts to the strip wire dtype first, ``None`` = untouched f32)."""
+    if dtype is not None:
+        images = images.astype(dtype)
+    sub = 16 if images.dtype.itemsize == 2 else 8
     n_proj, n_v, n_u = images.shape
     rows = max(band, n_v + 2)
-    rows += (-rows) % 8
+    rows += (-rows) % sub
     cols = max(width, n_u + 2)
     cols += (-cols) % 128
     return jnp.pad(images, ((0, 0), (1, rows - n_v - 1),
@@ -223,13 +244,18 @@ def _pad_up_stack(images, band: int, width: int):
     jax.jit,
     static_argnames=("gs", "ty", "chunk", "band", "width", "pbatch",
                      "double_buffer", "db_depth", "micro", "micro_group",
-                     "micro_band", "micro_width", "interpret"))
+                     "micro_band", "micro_width", "shared_window",
+                     "strip_dtype", "interpret"))
 def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
                  width, pbatch, double_buffer, db_depth, micro,
-                 micro_group, micro_band, micro_width, interpret):
+                 micro_group, micro_band, micro_width, shared_window,
+                 strip_dtype, interpret):
     from repro.core.backproject import _stream_batches
 
-    padded = _pad_up_stack(images, band, width)
+    # With shared_window the (band, width) passed here are already the
+    # superset-window dims sized by the caller.
+    padded = _pad_up_stack(images, band, width,
+                           strip_wire_dtype(strip_dtype))
 
     def call(vol, imgs, A):
         return backproject_volume_pallas_batch(
@@ -237,7 +263,8 @@ def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
             ty=ty, chunk=chunk, band=band, width=width,
             double_buffer=double_buffer, db_depth=db_depth, micro=micro,
             micro_group=micro_group, micro_band=micro_band,
-            micro_width=micro_width, interpret=interpret)
+            micro_width=micro_width, shared_window=shared_window,
+            interpret=interpret)
 
     return _stream_batches(padded, mats, volume, pbatch, call)
 
@@ -246,6 +273,51 @@ def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
 # planner pass is host-side numpy and paid once per distinct problem,
 # mirroring repro.core.backproject._VALIDATED_STRIPS.
 _VALIDATED_STACKS: set = set()
+
+# (gs, ty, chunk, pbatch, sha1(mats)) -> planner-tight superset needs.
+# The group planner pass is host-side numpy over every projection; pay
+# it once per distinct problem like the validation memos above.
+_SHARED_REQS: dict = {}
+
+
+def shared_window_dims(geom: Geometry, mats, *, ty: int, chunk: int,
+                       pbatch: int, shared_band: int | None = None,
+                       shared_width: int | None = None
+                       ) -> tuple[int, int]:
+    """Size (and check) the shared superset window for a projection set.
+
+    Returns the ``(band, width)`` the shared-window batch kernel must
+    run with: the planner-tight group requirement
+    (:func:`repro.core.clipping.shared_window_requirement`, saturated at
+    the full padded detector — a full-detector window can never lose a
+    tap), rounded up to hardware tiles when auto-sized.  Explicit dims
+    smaller than the requirement raise — an undersized superset window
+    drops taps silently, same hazard class as an undersized strip.
+    """
+    gs = GeomStatic.of(geom)
+    mats64 = np.asarray(mats, np.float64).reshape(-1, 3, 4)
+    key = (gs, ty, chunk, pbatch,
+           hashlib.sha1(mats64.tobytes()).hexdigest())
+    need = _SHARED_REQS.get(key)
+    if need is None:
+        need = shared_window_requirement(geom, mats64, ty=ty, chunk=chunk,
+                                         pbatch=pbatch)
+        if len(_SHARED_REQS) >= 4096:
+            _SHARED_REQS.clear()
+        _SHARED_REQS[key] = need
+    need_band = min(need[0], gs.n_v + 2)
+    need_width = min(need[1], gs.n_u + 2)
+    band = _round8(need_band) if shared_band is None else int(shared_band)
+    width = (_round128(need_width) if shared_width is None
+             else int(shared_width))
+    if band < need_band or width < need_width:
+        raise ValueError(
+            f"shared window (shared_band={band}, shared_width={width}) "
+            f"does not cover the projection group's superset footprint; "
+            f"need at least (shared_band={need_band}, "
+            f"shared_width={need_width}) for ty={ty}, chunk={chunk}, "
+            f"pbatch={pbatch} — undersized windows drop taps silently")
+    return band, width
 
 
 def pallas_backproject_batch(volume, images, mats,
@@ -257,6 +329,10 @@ def pallas_backproject_batch(volume, images, mats,
                              db_depth: int = 2, micro: bool = False,
                              micro_group: int = 8, micro_band: int = 8,
                              micro_width: int = 32,
+                             shared_window: bool = False,
+                             shared_band: int | None = None,
+                             shared_width: int | None = None,
+                             strip_dtype: str = "float32",
                              interpret: bool | None = None,
                              validate: bool = True,
                              strategy: str = "fixed"):
@@ -282,6 +358,19 @@ def pallas_backproject_batch(volume, images, mats,
     ``micro``/``micro_*`` variant flags — from the autotuner cache for
     this key: every tuned decision now runs the kernel it was timed on,
     and an impossible combination raises instead of being shed.
+
+    ``strip_dtype="bfloat16"`` carries the padded stack (all strip/
+    window DMAs and the VMEM scratch) in bf16 — the kernels upcast to
+    f32 at the one-hot matmul and accumulate in f32, so only the tap
+    values round; the f32 default is bitwise-unchanged.
+    ``shared_window=True`` selects the superset-window kernel: one
+    ``(pbatch, band, width)`` window DMA per (volume tile, projection
+    group) instead of ``pbatch`` strip fetches.  The window dims are
+    sized by the host group planner (:func:`shared_window_dims`) — pass
+    ``shared_band``/``shared_width`` to pin them, which raises if they
+    under-cover.  Sizing needs the full :class:`Geometry` (not a bare
+    ``GeomStatic``) and runs regardless of ``validate`` — it is the
+    correctness guard for this variant, not an optional check.
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
     if strategy == "auto":
@@ -302,17 +391,24 @@ def pallas_backproject_batch(volume, images, mats,
             micro_group = int(tuned.get("micro_group", micro_group))
             micro_band = int(tuned.get("micro_band", micro_band))
             micro_width = int(tuned.get("micro_width", micro_width))
+            shared_window = bool(tuned.get("shared_window", shared_window))
+            shared_band = tuned.get("shared_band", shared_band)
+            shared_width = tuned.get("shared_width", shared_width)
+            strip_dtype = str(tuned.get("strip_dtype", strip_dtype))
     elif strategy != "fixed":
         raise ValueError(
             f"unknown strategy {strategy!r}; want 'fixed' or 'auto'")
-    if micro and double_buffer:
+    if (micro and double_buffer
+            or shared_window and (micro or double_buffer)):
         raise ValueError(
-            "batch kernel variants are exclusive: got micro=True and "
-            "double_buffer=True; a tuned decision names exactly one")
+            f"batch kernel variants are exclusive: got micro={micro}, "
+            f"double_buffer={double_buffer}, shared_window="
+            f"{shared_window}; a tuned decision names exactly one")
     if double_buffer and int(db_depth) < 2:
         raise ValueError(
             f"db_depth={db_depth}: the pipelined batch kernel needs an "
             f"in-flight slot rotation of at least 2")
+    strip_wire_dtype(strip_dtype)   # loud on typos, before any tracing
     ty, chunk, band, width = clamp_tiles(gs, ty, chunk, band, width)
     micro_band = min(micro_band, band)
     micro_width = min(micro_width, width)
@@ -320,7 +416,20 @@ def pallas_backproject_batch(volume, images, mats,
     mats_f32 = jnp.asarray(mats, jnp.float32)
     n_proj = int(images.shape[0])
     pbatch = max(1, min(int(pbatch), n_proj)) if n_proj else 1
-    if validate:
+    if shared_window:
+        # Mandatory sizing/coverage pass — see the docstring.  The
+        # resulting superset dims *replace* (band, width) for the rest
+        # of the pipeline: they are what the kernel DMAs and what the
+        # one-hot selectors span.
+        if isinstance(geom, GeomStatic):
+            raise ValueError(
+                "shared_window=True needs the full Geometry: the host "
+                "group planner sizes the superset window")
+        band, width = shared_window_dims(
+            geom, mats, ty=ty, chunk=chunk, pbatch=pbatch,
+            shared_band=shared_band, shared_width=shared_width)
+        _, _, band, width = clamp_tiles(gs, ty, chunk, band, width)
+    elif validate:
         if isinstance(geom, GeomStatic):
             raise ValueError("validate=True needs the full Geometry")
         mats64 = np.asarray(mats, np.float64).reshape(-1, 3, 4)
@@ -342,4 +451,5 @@ def pallas_backproject_batch(volume, images, mats,
     return _run_batched(jnp.asarray(volume), images, mats_f32, gs, ty,
                         chunk, band, width, pbatch, double_buffer,
                         int(db_depth), micro, micro_group, micro_band,
-                        micro_width, interpret)
+                        micro_width, shared_window, strip_dtype,
+                        interpret)

@@ -154,11 +154,20 @@ class ReconstructionEngine:
         The scan occupies a volume slot immediately when one is free,
         else it queues (its chunks are still filtered and staged on
         arrival) until a running scan retires — continuous batching.
+
+        ``n_proj=None`` means a full scan (``geom.n_proj``).  An explicit
+        non-positive count is a caller bug and raises — a truthiness
+        check here once turned ``n_proj=0`` into a silent full scan.
         """
+        if n_proj is not None and int(n_proj) <= 0:
+            raise ValueError(
+                f"begin_scan: n_proj must be positive, got {n_proj!r} "
+                f"(pass None for a full scan)")
         sid = self._next_sid
         self._next_sid += 1
         self.scans[sid] = ScanState(
-            sid=sid, n_proj=int(n_proj) if n_proj else self.geom.n_proj)
+            sid=sid,
+            n_proj=int(n_proj) if n_proj is not None else self.geom.n_proj)
         self.queue.append(sid)
         self._admit()
         return sid

@@ -42,19 +42,26 @@ DEFAULT_STRATEGY = "strip2"
 # kernel candidates carry ``double_buffer``/``db_depth``/``micro`` and
 # the batch path *honors* them — a v2 decision's variant flags were
 # timed against a batch path that silently shed them, so replaying one
-# would misattribute its numbers).  ``load_tuned`` treats any other
-# version as untuned, so stale ``.repro_tune/`` files are *ignored*,
-# never misread into the new dataclass.
-TUNE_SCHEMA_VERSION = 3
+# would misattribute its numbers; v4: the ``strip_dtype`` and
+# ``shared_window`` axes — a v3 decision predates the bf16-wire and
+# superset-window variants, so its "best" never competed against them
+# and replaying it would freeze the old design space).  ``load_tuned``
+# treats any other version as untuned, so stale ``.repro_tune/`` files
+# are *ignored*, never misread into the new dataclass.
+TUNE_SCHEMA_VERSION = 4
 
 # ``micro_*`` ride along with ``micro``: a tuned micro decision was
 # validated (and timed) at a specific ``(micro_band, micro_width)``
 # window — resolving the flag without the window would run the kernel at
 # defaults it was never validated at.  ``db_depth`` likewise rides with
-# ``double_buffer``: the depth is part of the timed pipeline shape.
+# ``double_buffer``: the depth is part of the timed pipeline shape, and
+# ``shared_band``/``shared_width`` with ``shared_window`` (``None`` dims
+# auto-size from the group planner at resolve time, so they are usually
+# absent).  ``strip_dtype`` is the wire dtype the decision was timed at.
 _PALLAS_KEYS = ("ty", "chunk", "band", "width", "double_buffer",
                 "db_depth", "micro", "micro_group", "micro_band",
-                "micro_width", "pbatch")
+                "micro_width", "shared_window", "shared_band",
+                "shared_width", "strip_dtype", "pbatch")
 
 # Options each jnp strategy actually accepts — caller options riding
 # along with strategy="auto" are filtered to the *resolved* strategy, so
@@ -66,8 +73,10 @@ _STRATEGY_KEYS = {
     "scalar": ("pbatch",),
     "gather": ("pbatch",),
     "onehot": ("vox_block", "pbatch"),
-    "strip": ("chunk", "band", "width", "strips_per_block", "pbatch"),
-    "strip2": ("group", "gband", "gwidth", "groups_per_block", "pbatch"),
+    "strip": ("chunk", "band", "width", "strips_per_block", "strip_dtype",
+              "pbatch"),
+    "strip2": ("group", "gband", "gwidth", "groups_per_block",
+               "strip_dtype", "pbatch"),
 }
 
 

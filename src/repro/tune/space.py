@@ -105,6 +105,11 @@ def jnp_candidates(gs: GeomStatic,
         bases.append(Candidate.of(
             "strip2", group=min(group, L), gband=min(gband, gs.n_v + 2),
             gwidth=min(gwidth, gs.n_u + 2)))
+    # The bf16-wire axis on the best strip window: halves strip bytes at
+    # identical tap semantics (f32 accumulate), so it must compete.
+    bases.append(Candidate.of(
+        "strip2", group=min(8, L), gband=min(8, gs.n_v + 2),
+        gwidth=min(64, gs.n_u + 2), strip_dtype="bfloat16"))
     cands = [Candidate.of(b.strategy, **dict(b.opts), pbatch=pb)
              for b in bases for pb in pbatches]
     # De-dup clamped collisions on tiny geometries.
@@ -148,6 +153,22 @@ def pallas_candidates(gs: GeomStatic,
                                   db_depth=2, **base))
         cands.append(Candidate.of("pallas", pbatch=pb, **micro_win,
                                   **base))
+        # bf16 wire on the plain batch kernel (halved strip DMA bytes).
+        cands.append(Candidate.of("pallas", pbatch=pb,
+                                  strip_dtype="bfloat16", **base))
+        # Shared superset window: one DMA per projection group.  The
+        # window dims auto-size from the group planner at run time; the
+        # VMEM screen assumes up to 2x the base strip dims per slab
+        # (itemsize 2 for the bf16 variant).
+        if pallas_batch_fits_vmem(gs, pbatch=pb, ty=base["ty"],
+                                  chunk=base["chunk"],
+                                  band=2 * base["band"],
+                                  width=2 * base["width"], depth=pb):
+            cands.append(Candidate.of("pallas", pbatch=pb,
+                                      shared_window=True, **base))
+            cands.append(Candidate.of("pallas", pbatch=pb,
+                                      shared_window=True,
+                                      strip_dtype="bfloat16", **base))
     if batched:
         pb = max(batched)
         if pallas_batch_fits_vmem(gs, pbatch=pb, depth=4, **base):

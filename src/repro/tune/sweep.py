@@ -136,20 +136,45 @@ def sweep_strategies(geom: Geometry, *, image=None, A=None,
             elif cand.strategy == "pallas":
                 from repro.kernels.backproject_ops import (
                     clamp_tiles, pallas_backproject_batch,
-                    pallas_backproject_one, validate_strip_config)
+                    pallas_backproject_one, shared_window_dims,
+                    validate_strip_config)
+                from .space import pallas_batch_fits_vmem
                 ty, chunk, band, width = clamp_tiles(
                     gs, opts.get("ty", 8), opts.get("chunk", 128),
                     opts.get("band", 16), opts.get("width", 512))
-                for A_i in mats_all:
-                    # Micro candidates validate at *their* window values
-                    # — the same values the candidate persists, so the
-                    # resolved config always ran through this check.
-                    validate_strip_config(
-                        geom, A_i, ty=ty, chunk=chunk, band=band,
-                        width=width, micro=bool(opts.get("micro", False)),
-                        micro_group=int(opts.get("micro_group", 8)),
-                        micro_band=int(opts.get("micro_band", 8)),
-                        micro_width=int(opts.get("micro_width", 32)))
+                if opts.get("shared_window", False):
+                    # Size the superset window over the *full* matrix
+                    # set (what reconstruct-time resolution will see)
+                    # and screen it against the VMEM budget — the
+                    # planner-tight dims can exceed the base strip's.
+                    pb_eff = max(1, min(pbatch, geom.n_proj))
+                    sband, swidth = shared_window_dims(
+                        geom, mats_all, ty=ty, chunk=chunk,
+                        pbatch=pb_eff,
+                        shared_band=opts.get("shared_band"),
+                        shared_width=opts.get("shared_width"))
+                    itemsize = 2 if opts.get(
+                        "strip_dtype") == "bfloat16" else 4
+                    if not pallas_batch_fits_vmem(
+                            gs, pbatch=pb_eff, ty=ty, chunk=chunk,
+                            band=sband, width=swidth, depth=pb_eff,
+                            itemsize=itemsize):
+                        raise ValueError(
+                            f"shared window ({sband}, {swidth}) x "
+                            f"pbatch={pb_eff} exceeds the VMEM budget")
+                else:
+                    for A_i in mats_all:
+                        # Micro candidates validate at *their* window
+                        # values — the same values the candidate
+                        # persists, so the resolved config always ran
+                        # through this check.
+                        validate_strip_config(
+                            geom, A_i, ty=ty, chunk=chunk, band=band,
+                            width=width,
+                            micro=bool(opts.get("micro", False)),
+                            micro_group=int(opts.get("micro_group", 8)),
+                            micro_band=int(opts.get("micro_band", 8)),
+                            micro_width=int(opts.get("micro_width", 32)))
                 if pbatch == 1:
                     t = time_fn(pallas_backproject_one, vol0, image, A,
                                 geom, warmup=warmup, iters=iters, **tkw,

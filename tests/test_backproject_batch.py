@@ -419,3 +419,151 @@ def test_fold_projections_chunked_shuffled_and_slab(ct_case,
 
 def test_default_pbatch_is_sane():
     assert DEFAULT_PBATCH >= 1
+
+
+# ----------------------------------------------------------------------
+# Shared superset window (one group DMA per volume tile, DESIGN.md §10)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("pbatch", [1, 2, 3, 5])
+def test_pallas_batch_shared_matches_ref(ct_case, pbatch):
+    """Group-superset windows move *where* pixels are fetched from, not
+    which taps contribute: parity with the per-projection oracle at a
+    divisor depth, remainder depths, and the degenerate pbatch=1."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    out = pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4, chunk=16,
+                                   band=16, width=128, pbatch=pbatch,
+                                   shared_window=True)
+    np.testing.assert_allclose(np.asarray(out), _pallas_ref(filt, mats, 5),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_batch_shared_bitwise_vs_plain(ct_case):
+    """At equal pbatch the shared kernel accumulates the same
+    contributions in the same order as the plain batch kernel — the
+    superset window only re-bases the in-window offsets."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    plain = np.asarray(pallas_backproject_batch(
+        vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+        pbatch=2))
+    shared = np.asarray(pallas_backproject_batch(
+        vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+        pbatch=2, shared_window=True))
+    np.testing.assert_array_equal(shared, plain)
+
+
+def test_pallas_batch_shared_border_rays():
+    """Zero-outside semantics through the shared slab: edge-straddling
+    rays with a pbatch remainder."""
+    geom = Geometry().scaled(16, n_proj=8, n_u=24, n_v=18)
+    rng = np.random.default_rng(3)
+    imgs = rng.standard_normal((3, geom.n_v, geom.n_u)).astype(np.float32)
+    mats = np.stack([projection_matrix(geom, th)
+                     for th in (0.7, 1.1, 2.9)]).astype(np.float32)
+    # The host planner sizes the superset from the *submitted* matrices,
+    # so hand it the same geometry object reconstruct would see.
+    vol0 = jnp.zeros((geom.L,) * 3, jnp.float32)
+    ref = vol0
+    for k in range(3):
+        ref = backproject_one(ref, imgs[k], mats[k], geom,
+                              strategy="scalar")
+    out = pallas_backproject_batch(vol0, imgs, mats, geom, ty=8, chunk=16,
+                                   band=16, width=128, pbatch=2,
+                                   shared_window=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    assert (np.asarray(ref) == 0.0).any() and (np.asarray(ref) != 0.0).any()
+
+
+def test_pallas_batch_bf16_wire_differs_but_bounded(ct_case):
+    """bf16 on the kernel wire (plain and shared): observably different
+    from f32 (the cast is real) yet within ~0.5% of the volume scale —
+    the f32-accumulate contract, adversarial form."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    f32 = np.asarray(pallas_backproject_batch(
+        vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+        pbatch=2))
+    scale = float(np.abs(f32).max())
+    for flags in (dict(), dict(shared_window=True)):
+        b16 = np.asarray(pallas_backproject_batch(
+            vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+            pbatch=2, strip_dtype="bfloat16", **flags))
+        assert not np.array_equal(b16, f32)
+        assert float(np.abs(b16 - f32).max()) < 0.005 * scale
+
+
+def test_pallas_batch_shared_is_exclusive(ct_case):
+    """The shared slab owns the window layout — combining it with the
+    DMA pipeline or the micro window must raise, not silently pick one."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    for bad in (dict(micro=True), dict(double_buffer=True)):
+        with pytest.raises(ValueError, match="exclusive"):
+            pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4,
+                                     chunk=16, band=16, width=128,
+                                     pbatch=2, shared_window=True, **bad)
+
+
+def test_pallas_batch_shared_undersized_dims_raise(ct_case):
+    """Explicit shared dims below the planner's group-superset
+    requirement must raise before any device work — an undersized slab
+    would drop taps silently."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    with pytest.raises(ValueError, match="shared window"):
+        pallas_backproject_batch(vol0, filt, mats, GEOM, ty=4, chunk=16,
+                                 band=16, width=128, pbatch=2,
+                                 shared_window=True, shared_band=8,
+                                 shared_width=128)
+
+
+def test_pallas_batch_shared_needs_full_geometry(ct_case):
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    with pytest.raises(ValueError, match="Geometry"):
+        pallas_backproject_batch(vol0, filt, mats, GS, ty=4, chunk=16,
+                                 band=16, width=128, pbatch=2,
+                                 shared_window=True)
+
+
+def test_tuned_shared_window_resolves_from_cache(ct_case, tmp_path,
+                                                 monkeypatch):
+    """A v4 tuned decision carrying ``shared_window``/``strip_dtype``
+    redirects auto to the shared bf16 kernel bit-for-bit."""
+    from repro.tune import TUNE_SCHEMA_VERSION, clear_memory_cache
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    tiles = {"ty": 4, "chunk": 16, "band": 16, "width": 128}
+    _write_cache_file(tmp_path, {**tiles, "pbatch": 2,
+                                 "shared_window": True,
+                                 "strip_dtype": "bfloat16"},
+                      TUNE_SCHEMA_VERSION)
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    out_auto = pallas_backproject_batch(vol0, filt, mats, GEOM,
+                                        strategy="auto")
+    out_fix = pallas_backproject_batch(vol0, filt, mats, GEOM, pbatch=2,
+                                       shared_window=True,
+                                       strip_dtype="bfloat16", **tiles)
+    clear_memory_cache()
+    np.testing.assert_array_equal(np.asarray(out_auto),
+                                  np.asarray(out_fix))
+
+
+def test_v3_cache_file_is_ignored_not_misread(ct_case, tmp_path,
+                                              monkeypatch):
+    """A v3-era decision predates the strip_dtype/shared_window axes —
+    its "best" never competed against them, so it must read as untuned
+    rather than freeze the old design space."""
+    from repro.tune import clear_memory_cache, load_tuned
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    _write_cache_file(tmp_path, {"ty": 4, "chunk": 16, "band": 16,
+                                 "width": 128, "pbatch": 2}, version=3)
+    assert load_tuned(GS) is None
+    clear_memory_cache()

@@ -103,6 +103,23 @@ def test_engine_rejects_bad_submissions():
         eng.submit(sid, projs[2], mats[2], 2)           # post-retirement
 
 
+def test_begin_scan_zero_n_proj_is_loud_not_full():
+    """Regression: ``begin_scan(n_proj=0)`` used to fall through a
+    truthiness check (``n_proj or geom.n_proj``) and silently register a
+    *full* scan — a caller bug that would then block retirement forever
+    waiting for projections nobody declared.  Zero and negative counts
+    raise; only ``None`` means "full scan"."""
+    eng = ReconstructionEngine(GEOM, n_slots=1, pbatch=4)
+    with pytest.raises(ValueError, match="n_proj"):
+        eng.begin_scan(n_proj=0)
+    with pytest.raises(ValueError, match="n_proj"):
+        eng.begin_scan(n_proj=-3)
+    sid = eng.begin_scan(n_proj=None)
+    assert eng.scans[sid].n_proj == GEOM.n_proj
+    sid2 = eng.begin_scan(n_proj=2)
+    assert eng.scans[sid2].n_proj == 2
+
+
 def test_result_pop_releases_scan_state():
     """A long-running server must be able to drop retired volumes:
     result(pop=True) / release() evict the ScanState."""

@@ -320,6 +320,71 @@ def test_pallas_batch_candidates_cross_variants():
         assert not (c.get("double_buffer") and c.get("micro"))
 
 
+def test_candidate_space_spans_new_axes():
+    """The v4 axes compete: the jnp family proposes a bf16-wire strip2,
+    the kernel family proposes bf16 and shared-window batch variants,
+    and no candidate combines the shared slab with db/micro."""
+    from repro.tune.space import jnp_candidates, pallas_candidates
+
+    jnp_opts = [dict(c.opts) for c in jnp_candidates(GS)]
+    assert any(c.get("strip_dtype") == "bfloat16" for c in jnp_opts)
+    cands = [dict(c.opts) for c in pallas_candidates(GS)]
+    assert any(c.get("strip_dtype") == "bfloat16"
+               and not c.get("shared_window") for c in cands)
+    shared = [c for c in cands if c.get("shared_window")]
+    assert shared and any(c.get("strip_dtype") == "bfloat16"
+                          for c in shared)
+    for c in shared:
+        assert not c.get("double_buffer") and not c.get("micro")
+
+
+def test_sweep_times_or_skips_shared_and_bf16():
+    """A sweep over the new axes either times each candidate or skips it
+    with a recorded reason — never crashes, never times an invalid
+    config (the VMEM screen re-runs at the planner-tight shared dims)."""
+    from repro.tune.space import Candidate
+    from repro.tune.sweep import sweep_strategies
+
+    geom = Geometry().scaled(16, n_proj=4)
+    space = [
+        Candidate.of("strip2", group=8, gband=8, gwidth=64,
+                     strip_dtype="bfloat16", pbatch=2),
+        Candidate.of("pallas", ty=8, chunk=16, band=16, width=128,
+                     pbatch=2, strip_dtype="bfloat16"),
+        Candidate.of("pallas", ty=8, chunk=16, band=16, width=128,
+                     pbatch=2, shared_window=True),
+        Candidate.of("pallas", ty=8, chunk=16, band=16, width=128,
+                     pbatch=2, shared_window=True,
+                     strip_dtype="bfloat16"),
+    ]
+    res = sweep_strategies(geom, space=space, include_pallas=True,
+                           warmup=0, iters=1, min_total_s=0)
+    assert len(res.timings) + len(res.skipped) == len(space)
+    timed = {t.label for t in res.timings}
+    assert any("strip2" in lbl for lbl in timed)
+    for lbl, reason in res.skipped:
+        assert reason
+
+
+def test_resolve_strategy_passes_strip_dtype(tmp_path, monkeypatch):
+    """``strip_dtype`` survives auto resolution for the strip families —
+    a tuned bf16 decision must actually run bf16."""
+    from repro.tune.cache import resolve_strategy
+
+    monkeypatch.setenv("REPRO_TUNE_DIR", str(tmp_path / "tune"))
+    clear_memory_cache()
+    backend, device_kind = device_identity()
+    cfg = TunedConfig(strategy="strip2",
+                      opts={"strip_dtype": "bfloat16", "pbatch": 2},
+                      backend=backend, device_kind=device_kind,
+                      us_per_call=1.0)
+    store_tuned(GS, cfg)
+    strategy, opts = resolve_strategy(GS)
+    clear_memory_cache()
+    assert strategy == "strip2"
+    assert opts["strip_dtype"] == "bfloat16"
+
+
 def test_sharded_reconstruct_auto(ct_case):
     """auto resolves host-side before shard_map (1x1 mesh, bitwise)."""
     from repro.core.pipeline import sharded_reconstruct
