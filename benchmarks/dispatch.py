@@ -1,0 +1,86 @@
+"""Dispatch resolution cost: first-call selection vs warm lookup.
+
+The dispatcher's promise (DESIGN.md §11) is a one-time price: an
+untuned ``strategy="auto"`` pays one in-situ candidate sweep on first
+call, then every later resolve — in this process or any other — is a
+dict lookup.  This module prices both sides of that promise so the
+trajectory file catches either one regressing:
+
+* ``fig1/dispatch/cold`` — resolve against an *empty* tune dir with
+  in-situ selection enabled: shortlist construction, one timed sample
+  per candidate, schema-v4 persistence.  Median over repeated
+  fresh-dir resolves; the candidate jit caches are process-wide, so
+  the first sample carries the compiles and the median reports the
+  steady re-selection cost (what a new geometry pays on a warmed-up
+  server).
+* ``fig1/dispatch/warm`` — the cache-hit resolve on the same key
+  (memo + plan construction), the per-call overhead every
+  ``reconstruct(strategy="auto")`` pays forever after.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import Geometry
+
+from .common import bench_size, emit, record_extra, time_fn
+
+COLD_SAMPLES = 3
+
+
+def run(L: int | None = None):
+    from repro.dispatch import Dispatcher, reset_dispatcher
+    from repro.tune import clear_memory_cache
+
+    L = bench_size(32, 16) if L is None else L
+    n_proj = bench_size(8, 4)
+    geom = Geometry().scaled(L, n_proj=n_proj)
+
+    saved_dir = os.environ.get("REPRO_TUNE_DIR")
+    tmp = tempfile.mkdtemp(prefix="repro-dispatch-bench-")
+    try:
+        cold = []
+        plan = None
+        for i in range(COLD_SAMPLES):
+            d = os.path.join(tmp, f"cold{i}")
+            os.environ["REPRO_TUNE_DIR"] = d
+            clear_memory_cache()
+            disp = Dispatcher(insitu=True, include_pallas=False)
+            t0 = time.perf_counter()
+            plan = disp.resolve(geom)
+            cold.append(time.perf_counter() - t0)
+        cold_s = float(np.median(cold))
+        emit("fig1/dispatch/cold", cold_s * 1e6,
+             f"L={L} nproj={n_proj} samples={COLD_SAMPLES} "
+             f"winner={plan.label}")
+
+        # Warm: the tune dir of the last cold resolve already holds the
+        # decision; a fresh dispatcher hits disk once, then the memo.
+        clear_memory_cache()
+        disp = Dispatcher(insitu=False)
+        warm_s = time_fn(disp.resolve, geom, warmup=2, iters=20,
+                         min_total_s=0.05)
+        assert disp.resolve(geom) == plan
+        emit("fig1/dispatch/warm", warm_s * 1e6,
+             f"L={L} nproj={n_proj} winner={plan.label}")
+
+        record_extra("dispatch", {
+            "plan": plan.as_dict(),
+            "cold_us": cold_s * 1e6,
+            "cold_samples_us": [t * 1e6 for t in cold],
+            "warm_us": warm_s * 1e6,
+        })
+    finally:
+        if saved_dir is None:
+            os.environ.pop("REPRO_TUNE_DIR", None)
+        else:
+            os.environ["REPRO_TUNE_DIR"] = saved_dir
+        clear_memory_cache()
+        reset_dispatcher()
+        shutil.rmtree(tmp, ignore_errors=True)

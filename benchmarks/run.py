@@ -14,6 +14,8 @@ fig2_scaling                Fig. 2 (full-system scaling)
 fig3_codegen                Fig. 3 (compiler vs hand-structured)
 fig4_streaming              beyond-paper: streamed-engine time-to-first-
                             volume + projections/s at B concurrent scans
+dispatch                    beyond-paper: auto-dispatch resolution cost
+                            (cold in-situ selection vs warm cache hit)
 cycle_model                 Section 6.4 (per-iteration cycle breakdown)
 quality                     RabbitCT accuracy score (PSNR)
 lm_gather                   the technique on the assigned LM archs
@@ -40,7 +42,7 @@ from pathlib import Path
 import jax
 
 from . import common
-from . import (ct_hillclimb, cycle_model, fig1_single_device,
+from . import (ct_hillclimb, cycle_model, dispatch, fig1_single_device,
                fig2_scaling, fig3_codegen, fig4_streaming, lm_gather,
                moe_dispatch, quality, table2_op_census, table3_efficiency,
                table4_gather_micro, table5_traffic)
@@ -54,6 +56,7 @@ MODULES = [
     ("fig2_scaling", fig2_scaling),
     ("fig3_codegen", fig3_codegen),
     ("fig4_streaming", fig4_streaming),
+    ("dispatch", dispatch),
     ("cycle_model", cycle_model),
     ("quality", quality),
     ("lm_gather", lm_gather),

@@ -489,15 +489,27 @@ def backproject_plane_batch(plane, images, padded, mats, gs: GeomStatic, z,
     return plane + jnp.sum(contribs, axis=0).astype(plane.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("gs", "strategy", "opts_tuple"))
-def _backproject_one_jit(volume, image, A, gs, strategy, opts_tuple):
-    opts = dict(opts_tuple)
+def _explicit_plan(strategy: str, opts: dict, pbatch: int | None = None):
+    """Strictly validated plan for an explicitly named strategy.
+
+    Lazy import: ``repro.dispatch`` depends on this module, so the plan
+    type is only pulled in at call time (same pattern as the old
+    ``repro.tune.cache`` imports).
+    """
+    from repro.dispatch.plan import ExecutionPlan
+
+    return ExecutionPlan.explicit(strategy, opts, pbatch)
+
+
+@functools.partial(jax.jit, static_argnames=("gs", "plan"))
+def _backproject_one_jit(volume, image, A, gs, plan):
+    opts = plan.jnp_opts()
     padded = _pad_image(image)
 
     def body(z, vol):
         plane = jax.lax.dynamic_index_in_dim(vol, z, axis=0, keepdims=False)
         plane = backproject_plane(plane, image, padded, A, gs, z,
-                                  strategy, **opts)
+                                  plan.strategy, **opts)
         return jax.lax.dynamic_update_index_in_dim(vol, plane, z, axis=0)
 
     return jax.lax.fori_loop(0, gs.L, body, volume)
@@ -507,20 +519,21 @@ def backproject_one(volume, image, A, geom: Geometry | GeomStatic,
                     strategy: str = "strip2", **opts):
     """Add one projection's contribution to ``volume`` (``(L, L, L)``)."""
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
+    plan = _explicit_plan(strategy, opts)
     return _backproject_one_jit(volume, jnp.asarray(image),
-                                jnp.asarray(A, jnp.float32), gs, strategy,
-                                tuple(sorted(opts.items())))
+                                jnp.asarray(A, jnp.float32), gs, plan)
 
 
-def _backproject_batch_body(volume, images, mats, gs: GeomStatic, strategy,
-                            opts_tuple, z0):
+def _backproject_batch_body(volume, images, mats, gs: GeomStatic, plan,
+                            z0):
     """Volume-resident update for one projection batch (plane-major).
 
     ``volume`` may be a z-slab: the plane loop runs over
     ``volume.shape[0]`` and ``z0`` is the slab's first global z index
-    (traced; the sharded pipeline passes its rank offset).  Callers jit.
+    (traced; the sharded pipeline passes its rank offset).  ``plan`` is
+    the resolved :class:`repro.dispatch.ExecutionPlan`.  Callers jit.
     """
-    opts = dict(opts_tuple)
+    strategy, opts = plan.strategy, plan.jnp_opts()
     padded = jax.vmap(_pad_image)(images)
 
     def body(zi, vol):
@@ -560,17 +573,18 @@ def _stream_batches(projections, matrices, volume, pbatch: int, call):
 
 
 def _reconstruct_batched(projections, matrices, volume, gs: GeomStatic,
-                         strategy, opts_tuple, pbatch: int, z0):
-    """Stream all projections through ``volume``, ``pbatch`` at a time.
+                         plan, z0):
+    """Stream all projections through ``volume``, ``plan.pbatch`` at a
+    time.
 
     The inverted loop nest: batches outer, z-planes inner, projections
     innermost (vmapped) — each batch streams the volume through memory
     exactly once.
     """
     return _stream_batches(
-        projections, matrices, volume, pbatch,
+        projections, matrices, volume, plan.pbatch,
         lambda vol, imgs, mats: _backproject_batch_body(
-            vol, imgs, mats, gs, strategy, opts_tuple, z0))
+            vol, imgs, mats, gs, plan, z0))
 
 
 def backproject_batch(volume, images, mats, geom: Geometry | GeomStatic,
@@ -586,17 +600,15 @@ def backproject_batch(volume, images, mats, geom: Geometry | GeomStatic,
     themselves.
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
+    plan = _explicit_plan(strategy, opts, int(pbatch))
     return _fold_jit(jnp.asarray(volume), jnp.asarray(images),
                      jnp.asarray(mats, jnp.float32), jnp.int32(0), gs,
-                     strategy, tuple(sorted(opts.items())), int(pbatch))
+                     plan)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("gs", "strategy", "opts_tuple",
-                                    "pbatch"))
-def _fold_jit(volume, images, mats, z0, gs, strategy, opts_tuple, pbatch):
-    return _reconstruct_batched(images, mats, volume, gs, strategy,
-                                opts_tuple, pbatch, z0)
+@functools.partial(jax.jit, static_argnames=("gs", "plan"))
+def _fold_jit(volume, images, mats, z0, gs, plan):
+    return _reconstruct_batched(images, mats, volume, gs, plan, z0)
 
 
 def fold_projections(volume, images, mats, geom: Geometry | GeomStatic,
@@ -627,10 +639,11 @@ def fold_projections(volume, images, mats, geom: Geometry | GeomStatic,
         gs = geom
     images = jnp.asarray(images)
     n = int(images.shape[0])
+    plan = _explicit_plan(strategy, opts,
+                          max(1, min(int(pbatch), n)) if n else 1)
     return _fold_jit(jnp.asarray(volume), images,
-                     jnp.asarray(mats, jnp.float32), jnp.asarray(z0,
-                     jnp.int32), gs, strategy, tuple(sorted(opts.items())),
-                     max(1, min(int(pbatch), n)) if n else 1)
+                     jnp.asarray(mats, jnp.float32),
+                     jnp.asarray(z0, jnp.int32), gs, plan)
 
 
 # Memo of (geometry, strategy, window, matrices) combinations already
@@ -694,19 +707,15 @@ def validate_strip_opts(geom: Geometry, matrices, strategy: str,
     _VALIDATED_STRIPS.add(key)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("gs", "strategy", "opts_tuple",
-                                    "pbatch"))
-def _reconstruct_jit(projections, matrices, volume, gs, strategy,
-                     opts_tuple, pbatch=DEFAULT_PBATCH):
-    return _reconstruct_batched(projections, matrices, volume, gs,
-                                strategy, opts_tuple, pbatch,
+@functools.partial(jax.jit, static_argnames=("gs", "plan"))
+def _reconstruct_jit(projections, matrices, volume, gs, plan):
+    return _reconstruct_batched(projections, matrices, volume, gs, plan,
                                 jnp.int32(0))
 
 
 def reconstruct(projections, matrices, geom: Geometry,
                 strategy: str = "strip2", volume=None,
-                pbatch: int | None = None, **opts):
+                pbatch: int | None = None, plan=None, **opts):
     """Full reconstruction: stream every projection into the volume.
 
     ``projections`` are the *filtered* images ``(n_proj, n_v, n_u)``;
@@ -714,34 +723,33 @@ def reconstruct(projections, matrices, geom: Geometry,
     loop nest is batch-major (DESIGN.md §7): projections are folded into
     the volume ``pbatch`` at a time, so the volume streams through
     memory ``ceil(n_proj / pbatch)`` times instead of ``n_proj`` times.
-    ``pbatch=None`` takes the autotuned value for this key when present
-    and :data:`DEFAULT_PBATCH` otherwise; ``pbatch=1`` recovers the
-    per-projection nest.
+    ``pbatch=None`` takes the resolved plan's depth
+    (:data:`DEFAULT_PBATCH` when nothing tuned); ``pbatch=1`` recovers
+    the per-projection nest.
 
-    ``strategy="auto"`` consults the autotuner cache
-    (:mod:`repro.tune`) for the best strategy measured on this
-    geometry/backend/device triple, falling back to ``"strip2"`` with the
-    caller's options when untuned.  For ``strip``/``strip2`` the static
-    windows are validated against the host planner before any device work
-    (see :func:`validate_strip_opts`).
+    Resolution happens in ONE place — the process dispatcher
+    (:mod:`repro.dispatch`, DESIGN.md §11): ``strategy="auto"`` is a
+    cache hit, an in-situ first-call selection, or a logged ``strip2``
+    fallback; explicit strategies validate their options strictly.  A
+    pre-resolved ``plan`` (:class:`repro.dispatch.ExecutionPlan`)
+    bypasses resolution entirely — ``strategy``/``opts``/``pbatch`` are
+    then ignored.  For ``strip``/``strip2`` the static windows are
+    validated against the host planner before any device work (see
+    :func:`validate_strip_opts`).
 
-    The jitted body is a module-level function with ``(gs, strategy,
-    opts_tuple, pbatch)`` static, so repeated calls with one problem hit
-    one compile-cache entry (``_reconstruct_jit._cache_size()``).
+    The jitted body is a module-level function with ``(gs, plan)``
+    static, so repeated calls with one problem hit one compile-cache
+    entry (``_reconstruct_jit._cache_size()``).
     """
     gs = GeomStatic.of(geom)
-    if strategy == "auto":
-        from repro.tune.cache import resolve_strategy
+    if plan is None:
+        from repro.dispatch import get_dispatcher
 
-        strategy, opts = resolve_strategy(gs, opts)
-    if pbatch is None:
-        pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
-    else:
-        opts.pop("pbatch", None)
-    validate_strip_opts(geom, matrices, strategy, opts)
+        plan = get_dispatcher().resolve(geom, strategy, opts,
+                                        pbatch=pbatch)
+    validate_strip_opts(geom, matrices, plan.strategy, plan.jnp_opts())
     projections = jnp.asarray(projections)
     matrices = jnp.asarray(matrices, jnp.float32)
     if volume is None:
         volume = jnp.zeros((gs.L, gs.L, gs.L), dtype=jnp.float32)
-    return _reconstruct_jit(projections, matrices, volume, gs, strategy,
-                            tuple(sorted(opts.items())), int(pbatch))
+    return _reconstruct_jit(projections, matrices, volume, gs, plan)

@@ -35,7 +35,7 @@ from jax.sharding import Mesh
 from repro.dist.sharding import (ShardingRules, logical_to_spec,
                                  shard_constraint, sharding_context)
 
-from .backproject import (DEFAULT_PBATCH, GeomStatic, _reconstruct_batched,
+from .backproject import (GeomStatic, _reconstruct_batched,
                           validate_strip_opts)
 from .filtering import apply_filter, make_filter_plan
 from .geometry import Geometry
@@ -43,21 +43,23 @@ from .geometry import Geometry
 __all__ = ["sharded_reconstruct", "reconstruct_shards"]
 
 
-def reconstruct_shards(local_projs, local_mats, gs: GeomStatic,
-                       strategy: str, opts_tuple, local_volume,
-                       pbatch: int = DEFAULT_PBATCH, z0=None):
+def reconstruct_shards(local_projs, local_mats, gs: GeomStatic, plan,
+                       local_volume, z0=None):
     """Per-rank body: back-project the local projection subset.
 
-    ``local_volume`` may be a z-slab of the full volume; ``z0`` is the
-    slab's first *global* z index (default 0 — a full-volume or
-    first-slab caller).  It used to be hard-coded to 0, so any caller
-    handing this body a non-first slab back-projected the wrong planes.
+    ``plan`` is the resolved :class:`repro.dispatch.ExecutionPlan`
+    (strategy, sample options, and batch depth in one static object —
+    build one with ``ExecutionPlan.explicit(...)`` or resolve via the
+    dispatcher).  ``local_volume`` may be a z-slab of the full volume;
+    ``z0`` is the slab's first *global* z index (default 0 — a
+    full-volume or first-slab caller).  It used to be hard-coded to 0,
+    so any caller handing this body a non-first slab back-projected the
+    wrong planes.
     """
     if z0 is None:
         z0 = jnp.int32(0)
     return _reconstruct_batched(local_projs, local_mats, local_volume, gs,
-                                strategy, opts_tuple, pbatch,
-                                jnp.asarray(z0, jnp.int32))
+                                plan, jnp.asarray(z0, jnp.int32))
 
 
 def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
@@ -87,24 +89,18 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     ``filter_projections`` handed any subset the first-k-angles
     weights.)
 
-    ``strategy="auto"`` resolves through the autotuner cache exactly like
+    ``strategy="auto"`` resolves through the process dispatcher
+    (:mod:`repro.dispatch`) exactly like
     :func:`repro.core.backproject.reconstruct` — resolution (including
     the tuned ``pbatch``) happens here, host-side, before the
     ``shard_map`` closure is built, so every rank runs one identical
-    strategy and batch size.
+    plan.
     """
-    gs = GeomStatic.of(geom)
-    if strategy == "auto":
-        from repro.tune.cache import resolve_strategy
+    from repro.dispatch import get_dispatcher
 
-        strategy, opts = resolve_strategy(gs, opts)
-    if pbatch is None:
-        pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
-    else:
-        opts.pop("pbatch", None)
-    pbatch = int(pbatch)
-    validate_strip_opts(geom, matrices, strategy, opts)
-    opts_tuple = tuple(sorted(opts.items()))
+    gs = GeomStatic.of(geom)
+    plan = get_dispatcher().resolve(geom, strategy, opts, pbatch=pbatch)
+    validate_strip_opts(geom, matrices, plan.strategy, plan.jnp_opts())
     proj_shards = 1
     for ax in proj_axes:
         proj_shards *= mesh.shape[ax]
@@ -116,7 +112,7 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
     if gs.L % z_shards:
         raise ValueError(f"L={gs.L} not divisible by {z_shards} z-shards")
 
-    plan = None
+    fplan = None
     pw_full = None
     if not prefiltered:
         if projections.shape[0] != geom.n_proj:
@@ -125,11 +121,11 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
                 f"raw stack must be the full scan: got "
                 f"{projections.shape[0]} projections for "
                 f"n_proj={geom.n_proj}")
-        plan = make_filter_plan(geom, short_scan)
+        fplan = make_filter_plan(geom, short_scan)
         # The Parker table is sharded along the projection axis exactly
         # like the projections, so rank k filters its subset with the
         # weights of the angles it holds (ones = no short-scan weights).
-        pw_full = (plan.parker if plan.parker is not None
+        pw_full = (fplan.parker if fplan.parker is not None
                    else jnp.ones((geom.n_proj, geom.n_u), jnp.float32))
 
     # One sharding vocabulary with the LM path (repro.dist.sharding):
@@ -149,8 +145,8 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
         # varying-manual-axes typing).
         local_volume = jax.lax.pcast(local_volume, tuple(proj_axes),
                                      to="varying")
-        partial = _reconstruct_slab(local_projs, local_mats, gs, strategy,
-                                    opts_tuple, local_volume, z0, pbatch)
+        partial = reconstruct_shards(local_projs, local_mats, gs, plan,
+                                     local_volume, z0=z0)
         # Sum the projection-sharded partial volumes.
         for ax in proj_axes:
             partial = jax.lax.psum(partial, ax)
@@ -169,7 +165,7 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
             in_specs=(proj_spec, proj_spec, proj_spec, vol_spec),
             out_specs=vol_spec)
         def run(local_projs, local_mats, local_pw, local_volume):
-            local_projs = apply_filter(local_projs, plan, local_pw)
+            local_projs = apply_filter(local_projs, fplan, local_pw)
             return slab_body(local_projs, local_mats, local_volume)
 
     with sharding_context(mesh, rules):
@@ -187,15 +183,3 @@ def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
             return run(projections, matrices, volume)
         pw_full = shard_constraint(pw_full, ("proj", None))
         return run(projections, matrices, pw_full, volume)
-
-
-def _reconstruct_slab(local_projs, local_mats, gs, strategy, opts_tuple,
-                      slab, z0, pbatch=DEFAULT_PBATCH):
-    """Back-project a projection subset into a z-slab starting at ``z0``.
-
-    Batch-major: the slab streams once per ``pbatch`` projections.  Same
-    helper as the single-device ``reconstruct`` path, so a 1×1 mesh is
-    bit-for-bit the single-device computation.
-    """
-    return _reconstruct_batched(local_projs, local_mats, slab, gs, strategy,
-                                opts_tuple, pbatch, z0)

@@ -1,0 +1,279 @@
+"""Dispatcher: ``strategy="auto"`` resolved in exactly one place.
+
+State machine per ``(GeomStatic, backend, device_kind)`` key
+(DESIGN.md §11):
+
+1. **Cache hit** — a schema-current :class:`TunedConfig` exists under
+   ``.repro_tune/`` (or the in-process memo): resolution is a dict
+   lookup, zero timing work.
+2. **In-situ first-call selection** — no cached decision, in-situ
+   enabled (the default; disable with ``REPRO_DISPATCH_INSITU=0``) and
+   the caller holds a full :class:`Geometry`: time a deterministic
+   top-k candidate shortlist once each on the caller's real shapes
+   (one warmup + one sample per candidate through
+   :func:`repro.tune.sweep.sweep_strategies`, the inductor
+   ``MultiKernelCall`` idea), persist the winner through the normal
+   schema-v4 cache, and log the selection.  Every later call — in this
+   process or any other — is a lookup.
+3. **Fallback** — selection unavailable (disabled, or only a bare
+   ``GeomStatic`` in hand): one structured warning naming the key and
+   the untimed ``strip2`` default, then the pre-dispatch behaviour
+   bit-for-bit.
+
+The timing problem is synthesized from the geometry by the sweep
+(white noise at the mid-sweep angle); timings depend on shapes, not
+image content, so first-call selection needs no caller arrays and a
+streaming engine can resolve at construction time.
+"""
+
+from __future__ import annotations
+
+import logging
+import os
+import time
+
+from repro.core.backproject import (DEFAULT_PBATCH, STRATEGIES, GeomStatic)
+from repro.core.geometry import Geometry
+from repro.tune.cache import (_PALLAS_KEYS, DEFAULT_STRATEGY, TunedConfig,
+                              cache_key, device_identity,
+                              filter_strategy_opts, load_tuned,
+                              store_tuned, tune_dir)
+from repro.tune.space import Candidate, jnp_candidates, pallas_candidates
+
+from .plan import ExecutionPlan
+
+__all__ = ["Dispatcher", "insitu_candidates", "get_dispatcher",
+           "set_dispatcher", "reset_dispatcher"]
+
+logger = logging.getLogger("repro.dispatch")
+
+#: Environment switch for first-call selection.  Unset/``1`` = enabled.
+INSITU_ENV = "REPRO_DISPATCH_INSITU"
+
+# Shortlist order for the jnp families: cheapest-likely-winner first so
+# the selection loop fronts its budget on plausible candidates (scalar
+# is the known-slow oracle and goes last).
+_JNP_PREFERENCE = ("strip2", "gather", "strip", "onehot", "scalar")
+
+
+def insitu_candidates(gs: GeomStatic, *, topk: int = 6,
+                      include_pallas: bool = False) -> list[Candidate]:
+    """Deterministic first-call shortlist for one geometry.
+
+    One representative per jnp strategy family (first tile point of
+    :func:`jnp_candidates` at :data:`DEFAULT_PBATCH`, preference-ordered)
+    plus the bf16-wire strip2 competitor, truncated to ``topk``; with
+    ``include_pallas`` the projection-batched kernel variants ride along
+    (their own ``topk`` budget).  Purely a function of ``gs`` — two
+    processes shortlist identically, so selection is reproducible.
+    """
+    topk = max(1, int(topk))
+    by_key: dict[tuple[str, str], Candidate] = {}
+    for cand in jnp_candidates(gs, pbatches=(DEFAULT_PBATCH,)):
+        dtype = str(dict(cand.opts).get("strip_dtype", "float32"))
+        by_key.setdefault((cand.strategy, dtype), cand)
+    order = [(s, "float32") for s in _JNP_PREFERENCE]
+    order.append(("strip2", "bfloat16"))
+    picked = [by_key[k] for k in order if k in by_key][:topk]
+    if include_pallas:
+        batched = [c for c in pallas_candidates(gs,
+                                                pbatches=(DEFAULT_PBATCH,))
+                   if c.pbatch > 1]
+        picked += batched[:topk]
+    return picked
+
+
+class Dispatcher:
+    """Resolve execution plans; own the first-call selection policy.
+
+    ``insitu=None`` reads :data:`INSITU_ENV` at resolve time (default
+    on); ``include_pallas=None`` times kernel candidates only where
+    they compile (TPU).  ``sweep_fn`` is injectable for tests — it must
+    accept ``(geom, *, space, warmup, iters, min_total_s)`` and return
+    a :class:`repro.tune.sweep.SweepResult`.
+    """
+
+    def __init__(self, *, dirpath=None, insitu: bool | None = None,
+                 topk: int = 6, include_pallas: bool | None = None,
+                 sweep_fn=None, backend: str | None = None,
+                 device_kind: str | None = None):
+        self.dirpath = dirpath
+        self.insitu = insitu
+        self.topk = int(topk)
+        self.include_pallas = include_pallas
+        self._sweep_fn = sweep_fn
+        self.backend, self.device_kind = device_identity(backend,
+                                                         device_kind)
+        self._warned: set[tuple[str, str]] = set()
+
+    # ------------------------------------------------------------------
+    # Public surface
+    # ------------------------------------------------------------------
+    def resolve(self, geom: Geometry | GeomStatic, strategy: str = "auto",
+                opts: dict | None = None, *,
+                pbatch: int | None = None) -> ExecutionPlan:
+        """One plan for one call site — the only ``auto`` resolver.
+
+        Explicit strategies validate strictly and never touch the
+        cache.  ``auto`` walks the hit → in-situ select → fallback
+        machine documented on the module.
+        """
+        if strategy != "auto":
+            return ExecutionPlan.explicit(strategy, opts, pbatch)
+        gs, full_geom = self._split(geom)
+        cfg, source = self._lookup_or_select(gs, full_geom)
+        if cfg is None:
+            self._warn_fallback(gs, surface="jnp")
+            plan = self._fallback_plan(opts, pbatch)
+        else:
+            plan = ExecutionPlan.from_tuned(cfg, opts, pbatch)
+        logger.debug("dispatch: key=%s via %s -> %s",
+                     cache_key(gs, self.backend, self.device_kind),
+                     source, plan.label)
+        return plan
+
+    def resolve_kernel(self, geom: Geometry | GeomStatic) -> dict | None:
+        """Tuned Pallas kernel config for this key, or ``None``.
+
+        The kernel entry points' ``strategy="auto"``: a hit (or in-situ
+        selection) whose decision carries a kernel config returns it as
+        kwargs; otherwise ``None`` — the caller's explicit tile
+        parameters stand, with the same structured fallback warning as
+        the jnp path when no decision exists at all.
+        """
+        gs, full_geom = self._split(geom)
+        cfg, _source = self._lookup_or_select(gs, full_geom)
+        if cfg is None:
+            self._warn_fallback(gs, surface="kernel")
+            return None
+        if not cfg.pallas:
+            return None
+        return {k: cfg.pallas[k] for k in _PALLAS_KEYS if k in cfg.pallas}
+
+    # ------------------------------------------------------------------
+    # Resolution machinery
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _split(geom):
+        if isinstance(geom, GeomStatic):
+            return geom, None
+        return GeomStatic.of(geom), geom
+
+    def _insitu_enabled(self) -> bool:
+        if self.insitu is not None:
+            return bool(self.insitu)
+        flag = os.environ.get(INSITU_ENV, "1").strip().lower()
+        return flag not in ("0", "false", "off", "")
+
+    def _include_pallas(self) -> bool:
+        if self.include_pallas is not None:
+            return bool(self.include_pallas)
+        return self.backend == "tpu"
+
+    def _lookup_or_select(self, gs, full_geom):
+        cfg = load_tuned(gs, self.backend, self.device_kind, self.dirpath)
+        if cfg is not None:
+            return cfg, "cache"
+        if full_geom is not None and self._insitu_enabled():
+            cfg = self._select(full_geom)
+            if cfg is not None:
+                return cfg, "insitu"
+        return None, "fallback"
+
+    def _select(self, geom: Geometry) -> TunedConfig | None:
+        """First-call selection: time the shortlist once, persist."""
+        gs = GeomStatic.of(geom)
+        key = cache_key(gs, self.backend, self.device_kind)
+        space = insitu_candidates(gs, topk=self.topk,
+                                  include_pallas=self._include_pallas())
+        if not space:
+            return None
+        sweep = self._sweep_fn
+        if sweep is None:
+            from repro.tune.sweep import sweep_strategies
+
+            sweep = sweep_strategies
+        t0 = time.perf_counter()
+        res = sweep(geom, space=space, warmup=1, iters=1, min_total_s=0.0)
+        elapsed_ms = (time.perf_counter() - t0) * 1e3
+        best = res.best(STRATEGIES)
+        if best is None:
+            logger.warning(
+                "dispatch: in-situ selection for key=%s timed no valid "
+                "jnp candidate (skipped: %s); falling back", key,
+                res.skipped)
+            return None
+        best_pallas = res.best(("pallas",))
+        cfg = TunedConfig(
+            strategy=best.strategy, opts=dict(best.opts),
+            backend=self.backend, device_kind=self.device_kind,
+            us_per_call=best.us_per_call,
+            pallas=dict(best_pallas.opts) if best_pallas else None,
+            pallas_us=best_pallas.us_per_call if best_pallas else None,
+            timings=[t.as_dict() for t in res.timings])
+        path = store_tuned(gs, cfg, self.dirpath)
+        logger.info(
+            "dispatch: in-situ selection key=%s candidates=%d skipped=%d "
+            "elapsed_ms=%.0f winner=%s us_per_proj=%.1f kernel=%s "
+            "persisted=%s", key, len(res.timings), len(res.skipped),
+            elapsed_ms, best.label, best.us_per_call,
+            best_pallas.label if best_pallas else None, path)
+        return cfg
+
+    def _fallback_plan(self, opts, pbatch) -> ExecutionPlan:
+        filtered = filter_strategy_opts(DEFAULT_STRATEGY, opts,
+                                        context="dispatch")
+        if pbatch is None:
+            pbatch = int(filtered.pop("pbatch", DEFAULT_PBATCH))
+        else:
+            filtered.pop("pbatch", None)
+        return ExecutionPlan(strategy=DEFAULT_STRATEGY,
+                             opts=tuple(sorted(filtered.items())),
+                             pbatch=max(1, int(pbatch)))
+
+    def _warn_fallback(self, gs, *, surface: str) -> None:
+        """Satellite: the silent-fallback UX.  One structured warning
+        per (surface, key) per dispatcher, naming the key, the tune
+        dir consulted, and the untimed default taken."""
+        key = cache_key(gs, self.backend, self.device_kind)
+        if (surface, key) in self._warned:
+            return
+        self._warned.add((surface, key))
+        d = self.dirpath if self.dirpath is not None else tune_dir()
+        default = (f"strategy={DEFAULT_STRATEGY!r}" if surface == "jnp"
+                   else "the caller's explicit kernel parameters")
+        logger.warning(
+            "dispatch: no tuned decision for key=%s under %s and "
+            "in-situ selection is unavailable (%s=0, or no full "
+            "Geometry at the call site); falling back to untimed "
+            "default %s — run repro.tune.autotune or enable in-situ "
+            "selection to replace this guess with a measured winner",
+            key, d, INSITU_ENV, default)
+
+
+# ----------------------------------------------------------------------
+# Process-wide dispatcher
+# ----------------------------------------------------------------------
+
+_DISPATCHER: Dispatcher | None = None
+
+
+def get_dispatcher() -> Dispatcher:
+    """The process-wide dispatcher (created lazily with defaults)."""
+    global _DISPATCHER
+    if _DISPATCHER is None:
+        _DISPATCHER = Dispatcher()
+    return _DISPATCHER
+
+
+def set_dispatcher(d: Dispatcher | None) -> Dispatcher | None:
+    """Swap the process-wide dispatcher; returns the previous one."""
+    global _DISPATCHER
+    old = _DISPATCHER
+    _DISPATCHER = d
+    return old
+
+
+def reset_dispatcher() -> None:
+    """Drop the process-wide dispatcher (tests; tune-dir swaps)."""
+    set_dispatcher(None)

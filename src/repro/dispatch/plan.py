@@ -1,0 +1,138 @@
+"""ExecutionPlan: the one frozen description of how a reconstruction runs.
+
+Every entry point used to thread ``(strategy, opts_tuple, pbatch)`` —
+plus, on the kernel path, a second private tile-option resolution —
+through its own jit static arguments.  The plan collapses that surface
+into a single hashable object (DESIGN.md §11): the resolved jnp strategy
+and its sample options, the projection batch depth, the tuned Pallas
+kernel config when one exists, and whether the kernel beat the jnp nest
+when both were measured.  Two plans that execute the same computation
+compare equal, so jit compile caches key correctly no matter whether a
+plan came from an explicit strategy, a cache hit, or an in-situ
+selection.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+from repro.core.backproject import DEFAULT_PBATCH, STRATEGIES
+from repro.tune.cache import (_PALLAS_KEYS, _STRATEGY_KEYS,
+                              DEFAULT_STRATEGY, TunedConfig,
+                              filter_strategy_opts)
+
+__all__ = ["ExecutionPlan"]
+
+
+class ExecutionPlan(NamedTuple):
+    """Frozen, hashable resolution of one reconstruction configuration.
+
+    Fields:
+
+    * ``strategy`` — a concrete jnp strategy (one of
+      :data:`repro.core.backproject.STRATEGIES`; never ``"auto"``).
+    * ``opts`` — sorted ``(key, value)`` tuple of the strategy's
+      ``sample_*`` options (``pbatch`` lives in its own field).
+    * ``pbatch`` — projections folded per volume pass (DESIGN.md §7).
+    * ``pallas`` — sorted ``(key, value)`` tuple of the tuned Pallas
+      kernel config (:data:`repro.tune.cache._PALLAS_KEYS` subset), or
+      ``None`` when the key has no tuned kernel decision.
+    * ``use_pallas`` — True when the tuned evidence says the kernel
+      beat the best jnp strategy (``pallas_us < us_per_call``); batch
+      consumers that can run either body (the streaming fold) switch on
+      this.
+
+    Provenance (cache hit vs in-situ selection vs fallback) is
+    deliberately *not* a field: identical configurations must hash
+    equal so they share one compiled executable.  The dispatcher logs
+    where a plan came from instead.
+    """
+
+    strategy: str
+    opts: tuple = ()
+    pbatch: int = DEFAULT_PBATCH
+    pallas: tuple | None = None
+    use_pallas: bool = False
+
+    # ------------------------------------------------------------------
+    # Constructors
+    # ------------------------------------------------------------------
+    @classmethod
+    def explicit(cls, strategy: str, opts: dict | None = None,
+                 pbatch: int | None = None) -> "ExecutionPlan":
+        """Plan for an explicitly named strategy — strict validation.
+
+        Unknown option keys raise; known-but-inapplicable ones raise
+        too (the caller named the strategy, so a mismatched option is a
+        bug, not a cache artefact).  ``pbatch`` may ride in ``opts``.
+        """
+        if strategy not in STRATEGIES:
+            raise ValueError(
+                f"unknown strategy {strategy!r}; want one of {STRATEGIES} "
+                f"(or 'auto', resolved via repro.dispatch.Dispatcher)")
+        opts = dict(opts or {})
+        if pbatch is None:
+            pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
+        else:
+            opts.pop("pbatch", None)
+        opts = filter_strategy_opts(strategy, opts, strict=True,
+                                    context=f"strategy={strategy!r}")
+        opts.pop("pbatch", None)
+        return cls(strategy=strategy, opts=tuple(sorted(opts.items())),
+                   pbatch=max(1, int(pbatch)))
+
+    @classmethod
+    def from_tuned(cls, cfg: TunedConfig, caller_opts: dict | None = None,
+                   pbatch: int | None = None) -> "ExecutionPlan":
+        """Plan from a cached :class:`TunedConfig` + caller overrides.
+
+        Caller options override tuned ones per key; options the tuned
+        strategy does not accept are shed with a warning (the cache may
+        have resolved a different strategy than the caller's options
+        were written for), unknown keys raise.
+        """
+        strategy = (cfg.strategy if cfg.strategy in STRATEGIES
+                    else DEFAULT_STRATEGY)
+        allowed = _STRATEGY_KEYS[strategy]
+        merged = {k: v for k, v in dict(cfg.opts).items() if k in allowed}
+        merged.update(filter_strategy_opts(
+            strategy, caller_opts, context="dispatch"))
+        if pbatch is None:
+            pbatch = int(merged.pop("pbatch", DEFAULT_PBATCH))
+        else:
+            merged.pop("pbatch", None)
+        pallas = None
+        if cfg.pallas:
+            pallas = tuple(sorted(
+                (k, cfg.pallas[k]) for k in _PALLAS_KEYS if k in cfg.pallas))
+        use_pallas = bool(
+            pallas and cfg.pallas_us is not None
+            and cfg.us_per_call is not None
+            and cfg.pallas_us < cfg.us_per_call)
+        return cls(strategy=strategy, opts=tuple(sorted(merged.items())),
+                   pbatch=max(1, int(pbatch)), pallas=pallas,
+                   use_pallas=use_pallas)
+
+    # ------------------------------------------------------------------
+    # Consumption
+    # ------------------------------------------------------------------
+    def jnp_opts(self) -> dict:
+        """The ``sample_*`` keyword options of the jnp strategy."""
+        return dict(self.opts)
+
+    def pallas_opts(self) -> dict | None:
+        """The tuned kernel config as kwargs, or ``None`` when untuned."""
+        return dict(self.pallas) if self.pallas else None
+
+    @property
+    def label(self) -> str:
+        txt = ",".join(f"{k}={v}" for k, v in self.opts)
+        body = f"{self.strategy}[{txt}]" if txt else self.strategy
+        tail = "+pallas" if self.use_pallas else ""
+        return f"{body}@p{self.pbatch}{tail}"
+
+    def as_dict(self) -> dict:
+        return {"strategy": self.strategy, "opts": dict(self.opts),
+                "pbatch": self.pbatch,
+                "pallas": dict(self.pallas) if self.pallas else None,
+                "use_pallas": self.use_pallas}

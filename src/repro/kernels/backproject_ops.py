@@ -173,17 +173,19 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
 
     ``strategy="auto"`` pulls the tile parameters (``ty``/``chunk``/
     ``band``/``width``/``double_buffer``/``db_depth``/``micro``) from
-    the autotuner cache (:mod:`repro.tune`) for this geometry/backend/
-    device; when the key was never tuned the explicitly passed
-    parameters stand.  (``pbatch`` is the one tuned key with no
-    single-projection meaning — there is nothing to batch here; batch
-    callers resolve it through :func:`pallas_backproject_batch`.)
+    the process dispatcher (:mod:`repro.dispatch` — cache hit, in-situ
+    first-call selection, or a logged fallback) for this geometry/
+    backend/device; when no decision carries a kernel config the
+    explicitly passed parameters stand.  (``pbatch`` is the one tuned
+    key with no single-projection meaning — there is nothing to batch
+    here; batch callers resolve it through
+    :func:`pallas_backproject_batch`.)
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
     if strategy == "auto":
-        from repro.tune.cache import resolve_pallas_config
+        from repro.dispatch import get_dispatcher
 
-        tuned = resolve_pallas_config(gs)
+        tuned = get_dispatcher().resolve_kernel(geom)
         if tuned is not None:
             ty = int(tuned.get("ty", ty))
             chunk = int(tuned.get("chunk", chunk))
@@ -355,9 +357,10 @@ def pallas_backproject_batch(volume, images, mats,
     ``micro=True`` the per-group micro-window compute.  ``strategy=
     "auto"`` pulls the full tuned surface — ``ty``/``chunk``/``band``/
     ``width``, ``pbatch``, *and* the ``double_buffer``/``db_depth``/
-    ``micro``/``micro_*`` variant flags — from the autotuner cache for
-    this key: every tuned decision now runs the kernel it was timed on,
-    and an impossible combination raises instead of being shed.
+    ``micro``/``micro_*`` variant flags — from the process dispatcher
+    (:mod:`repro.dispatch`) for this key: every tuned decision runs the
+    kernel it was timed on, and an impossible combination raises
+    instead of being shed.
 
     ``strip_dtype="bfloat16"`` carries the padded stack (all strip/
     window DMAs and the VMEM scratch) in bf16 — the kernels upcast to
@@ -374,9 +377,9 @@ def pallas_backproject_batch(volume, images, mats,
     """
     gs = geom if isinstance(geom, GeomStatic) else GeomStatic.of(geom)
     if strategy == "auto":
-        from repro.tune.cache import resolve_pallas_config
+        from repro.dispatch import get_dispatcher
 
-        tuned = resolve_pallas_config(gs)
+        tuned = get_dispatcher().resolve_kernel(geom)
         if tuned is not None:
             ty = int(tuned.get("ty", ty))
             chunk = int(tuned.get("chunk", chunk))

@@ -36,8 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.backproject import (DEFAULT_PBATCH, GeomStatic,
-                                    _backproject_batch_body,
+from repro.core.backproject import (GeomStatic, _backproject_batch_body,
                                     validate_strip_opts)
 from repro.core.filtering import FilterPlan, apply_filter, make_filter_plan
 from repro.core.geometry import Geometry
@@ -60,14 +59,14 @@ def _filter_chunk(projs, idx, cosw, hf, parker, pad, n_u, n_proj, scale):
     return apply_filter(projs, plan, pw)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("gs", "strategy", "opts_tuple"))
-def _fold_slots(volumes, images, mats, mask, gs, strategy, opts_tuple):
+@functools.partial(jax.jit, static_argnames=("gs", "plan"))
+def _fold_slots(volumes, images, mats, mask, gs, plan):
     """One engine tick on device: fold a ``pbatch``-deep batch into every
     masked-in slot volume.
 
     ``volumes`` is ``(B, L, L, L)``, ``images`` ``(B, pbatch, n_v,
-    n_u)``, ``mats`` ``(B, pbatch, 3, 4)``, ``mask`` ``(B,)`` bool.  The
+    n_u)``, ``mats`` ``(B, pbatch, 3, 4)``, ``mask`` ``(B,)`` bool;
+    ``plan`` the resolved :class:`repro.dispatch.ExecutionPlan`.  The
     per-slot body is the batch-major volume pass of DESIGN.md §7 vmapped
     over slots; masked-out slots keep their volume bit-identical (their
     staged images are zero anyway, but the merge makes the guarantee
@@ -75,8 +74,8 @@ def _fold_slots(volumes, images, mats, mask, gs, strategy, opts_tuple):
     """
 
     def one(vol, imgs, ms):
-        return _backproject_batch_body(vol, imgs, ms, gs, strategy,
-                                       opts_tuple, jnp.int32(0))
+        return _backproject_batch_body(vol, imgs, ms, gs, plan,
+                                       jnp.int32(0))
 
     new = jax.vmap(one)(volumes, images, mats)
     return jnp.where(mask[:, None, None, None], new, volumes)
@@ -108,29 +107,47 @@ class ReconstructionEngine:
     n_u)`` projection (scalar ``angle_index``) or a ``(k, n_v, n_u)``
     chunk (``angle_index`` array of k global angle indices) — raw line
     integrals, filtered here on arrival.  ``strategy="auto"`` resolves
-    through the autotuner cache exactly like ``reconstruct``; strip
-    windows are validated against the host planner per submitted chunk
-    (memoised), so an undersized window raises instead of dropping taps.
+    through the process dispatcher exactly like ``reconstruct`` —
+    including in-situ first-call selection (the timing problem is
+    synthesized from the geometry, so resolution happens here at
+    construction, before any projection arrives); when the resolved
+    plan's tuned Pallas batch kernel beat the jnp nest
+    (``plan.use_pallas``), the fold step runs that kernel per ready
+    slot instead of the vmapped jnp body.  Strip windows are validated
+    against the host planner per submitted chunk (memoised), so an
+    undersized window raises instead of dropping taps.
     """
 
     def __init__(self, geom: Geometry, *, n_slots: int = 4,
                  strategy: str = "strip2", pbatch: int | None = None,
                  short_scan: bool | None = None, validate: bool = True,
-                 auto_step: bool = True, **opts):
+                 auto_step: bool = True, plan=None, **opts):
         self.geom = geom
         self.gs = GeomStatic.of(geom)
-        if strategy == "auto":
-            from repro.tune.cache import resolve_strategy
+        if plan is None:
+            from repro.dispatch import get_dispatcher
 
-            strategy, opts = resolve_strategy(self.gs, opts)
-        if pbatch is None:
-            pbatch = int(opts.pop("pbatch", DEFAULT_PBATCH))
+            plan = get_dispatcher().resolve(geom, strategy, opts,
+                                            pbatch=pbatch)
+        # ``self.plan`` is the *filter* plan (pre-dates the dispatcher);
+        # the execution plan lives under ``exec_plan``.
+        self.exec_plan = plan
+        self.strategy = plan.strategy
+        self.opts = plan.jnp_opts()
+        # Tuned kernel fold: only taken when the measured evidence says
+        # the Pallas batch kernel beat the jnp nest for this key.
+        self._pallas_kwargs = (plan.pallas_opts() if plan.use_pallas
+                               else None)
+        if pbatch is not None:
+            eff = int(pbatch)
+        elif self._pallas_kwargs is not None:
+            # The kernel decision was timed at its own batch depth.
+            eff = int(self._pallas_kwargs.get("pbatch", plan.pbatch))
         else:
-            opts.pop("pbatch", None)
-        self.strategy = strategy
-        self.pbatch = max(1, int(pbatch))
-        self.opts = dict(opts)
-        self._opts_tuple = tuple(sorted(opts.items()))
+            eff = plan.pbatch
+        self.pbatch = max(1, eff)
+        if self._pallas_kwargs is not None:
+            self._pallas_kwargs["pbatch"] = self.pbatch
         self.validate = validate
         self.auto_step = auto_step
         self.n_slots = int(n_slots)
@@ -142,7 +159,8 @@ class ReconstructionEngine:
         self.scans: dict[int, ScanState] = {}
         self.queue: list[int] = []
         self.slot_history: list[tuple[int, int]] = []  # (slot, sid)
-        self.stats = {"folds": 0, "fold_ticks": 0, "retired": 0}
+        self.stats = {"folds": 0, "fold_ticks": 0, "retired": 0,
+                      "pallas_folds": 0}
         self._next_sid = 0
 
     # ------------------------------------------------------------------
@@ -214,7 +232,9 @@ class ReconstructionEngine:
             raise ValueError(
                 f"scan {sid} declared {scan.n_proj} projections; "
                 f"{scan.received + k} submitted")
-        if self.validate:
+        if self.validate and self._pallas_kwargs is None:
+            # The kernel fold path validates its own tile config at fold
+            # time (pallas_backproject_batch(validate=...)).
             validate_strip_opts(self.geom, mats, self.strategy, self.opts)
         filt = _filter_chunk(
             projs, jnp.asarray(idx), self.plan.cosw, self.plan.hf,
@@ -265,7 +285,25 @@ class ReconstructionEngine:
                     or (scan.complete and scan.pending):
                 ready.append((slot, scan))
         progressed = False
-        if ready:
+        if ready and self._pallas_kwargs is not None:
+            # Tuned kernel fold: the Pallas batch winner, one launch per
+            # ready slot (zero-padded staging contributes exactly 0, so
+            # the static batch shape is shared with the jnp path).
+            from repro.kernels.backproject_ops import \
+                pallas_backproject_batch
+
+            for slot, scan in ready:
+                imgs, ms, n = self._take_batch(scan)
+                vol = pallas_backproject_batch(
+                    self._volumes[slot], imgs, ms, self.geom,
+                    validate=self.validate, **self._pallas_kwargs)
+                self._volumes = self._volumes.at[slot].set(vol)
+                scan.folded += n
+                self.stats["folds"] += n
+                self.stats["pallas_folds"] += n
+            self.stats["fold_ticks"] += 1
+            progressed = True
+        elif ready:
             images = [self._zero_image[None].repeat(self.pbatch, axis=0)
                       ] * self.n_slots
             mats = [np.broadcast_to(np.eye(3, 4, dtype=np.float32),
@@ -281,7 +319,7 @@ class ReconstructionEngine:
             self._volumes = _fold_slots(
                 self._volumes, jnp.stack(images),
                 jnp.asarray(np.stack(mats)), jnp.asarray(mask), self.gs,
-                self.strategy, self._opts_tuple)
+                self.exec_plan)
             self.stats["fold_ticks"] += 1
             progressed = True
         progressed |= self._retire()

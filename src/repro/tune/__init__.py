@@ -7,7 +7,8 @@ persistent.  See DESIGN.md §6.
 
 from .cache import (DEFAULT_STRATEGY, TUNE_SCHEMA_VERSION, TunedConfig,
                     autotune, cache_key,
-                    clear_memory_cache, device_identity, load_tuned,
+                    clear_memory_cache, device_identity,
+                    filter_strategy_opts, load_tuned,
                     resolve_pallas_config, resolve_strategy, store_tuned,
                     tune_dir)
 from .space import (Candidate, default_space, jnp_candidates,
@@ -17,7 +18,8 @@ from .timing import time_fn
 
 __all__ = [
     "DEFAULT_STRATEGY", "TUNE_SCHEMA_VERSION", "TunedConfig", "autotune", "cache_key",
-    "clear_memory_cache", "device_identity", "load_tuned",
+    "clear_memory_cache", "device_identity", "filter_strategy_opts",
+    "load_tuned",
     "resolve_pallas_config", "resolve_strategy", "store_tuned", "tune_dir",
     "Candidate", "default_space", "jnp_candidates",
     "pallas_batch_fits_vmem", "pallas_candidates",

@@ -29,8 +29,8 @@ from repro.core.backproject import STRATEGIES, GeomStatic
 __all__ = ["TunedConfig", "DEFAULT_STRATEGY", "TUNE_SCHEMA_VERSION",
            "tune_dir", "cache_key",
            "store_tuned", "load_tuned", "clear_memory_cache",
-           "device_identity", "resolve_strategy", "resolve_pallas_config",
-           "autotune"]
+           "device_identity", "filter_strategy_opts", "resolve_strategy",
+           "resolve_pallas_config", "autotune"]
 
 # What "auto" means before anyone has tuned: the repo's historical
 # hard-coded default.
@@ -78,6 +78,50 @@ _STRATEGY_KEYS = {
     "strip2": ("group", "gband", "gwidth", "groups_per_block",
                "strip_dtype", "pbatch"),
 }
+
+# Every option name *some* jnp strategy accepts.  A caller key outside
+# this set is a typo (or an option from a different universe, e.g. a
+# Pallas tile key) and raises; a key inside it that the resolved
+# strategy does not accept is shed with a warning.
+KNOWN_OPTION_KEYS = frozenset(
+    k for keys in _STRATEGY_KEYS.values() for k in keys)
+
+
+def filter_strategy_opts(strategy: str, opts: dict | None, *,
+                         strict: bool = False,
+                         context: str = "resolve_strategy") -> dict:
+    """Filter caller options down to what ``strategy`` accepts — loudly.
+
+    Unknown keys (not accepted by *any* jnp strategy) always raise: a
+    typo'd option must never be silently dropped.  Known keys the
+    resolved strategy does not accept are shed with a ``RuntimeWarning``
+    (``strict=False`` — the ``auto`` path, where the cache may have
+    resolved a different strategy than the caller's options were written
+    for) or raise (``strict=True`` — an explicitly named strategy, where
+    an inapplicable option is a caller bug).
+    """
+    out, shed = {}, []
+    allowed = _STRATEGY_KEYS[strategy]
+    for k, v in dict(opts or {}).items():
+        if k in allowed:
+            out[k] = v
+        elif k in KNOWN_OPTION_KEYS:
+            shed.append(k)
+        else:
+            raise ValueError(
+                f"{context}: unknown option {k!r} (no jnp strategy "
+                f"accepts it); known options: "
+                f"{tuple(sorted(KNOWN_OPTION_KEYS))}")
+    if shed:
+        msg = (f"{context}: option(s) {sorted(shed)} do not apply to "
+               f"strategy {strategy!r} (accepts {tuple(allowed)})")
+        if strict:
+            raise ValueError(msg)
+        import warnings
+
+        warnings.warn(msg + "; shedding them", RuntimeWarning,
+                      stacklevel=3)
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,18 +235,20 @@ def resolve_strategy(gs: GeomStatic, opts: dict | None = None, *,
     bit-for-bit.  Explicitly passed options override tuned ones per key,
     but only those the resolved strategy accepts survive — the cache may
     have tuned a *different* strategy than the one the caller's options
-    were written for.
+    were written for.  Shedding is loud (:func:`filter_strategy_opts`):
+    unknown keys raise, known-but-inapplicable ones warn.
     """
-    opts = dict(opts or {})
     cfg = load_tuned(gs, backend, device_kind, dirpath)
     if cfg is None or cfg.strategy not in STRATEGIES:
-        strategy, merged = DEFAULT_STRATEGY, opts
+        strategy, merged = DEFAULT_STRATEGY, {}
     else:
         strategy = cfg.strategy
-        merged = dict(cfg.opts)
-        merged.update(opts)
-    allowed = _STRATEGY_KEYS[strategy]
-    return strategy, {k: v for k, v in merged.items() if k in allowed}
+        # Tuned opts always belong to the tuned strategy; filter them
+        # defensively (a hand-edited cache file) but never warn on them.
+        allowed = _STRATEGY_KEYS[strategy]
+        merged = {k: v for k, v in dict(cfg.opts).items() if k in allowed}
+    merged.update(filter_strategy_opts(strategy, opts))
+    return strategy, merged
 
 
 def resolve_pallas_config(gs: GeomStatic, *, backend: str | None = None,

@@ -8,3 +8,17 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _dispatch_deterministic(monkeypatch):
+    """Keep the suite deterministic: an untuned ``strategy="auto"``
+    falls back to strip2 (the pre-dispatch contract) instead of timing
+    candidates in situ.  Dispatch tests opt back in explicitly with
+    ``Dispatcher(insitu=True)``; any test-installed process dispatcher
+    is dropped afterwards so state never leaks across tests."""
+    monkeypatch.setenv("REPRO_DISPATCH_INSITU", "0")
+    yield
+    from repro.dispatch import reset_dispatcher
+
+    reset_dispatcher()

@@ -76,6 +76,7 @@ def test_reconstruct_shards_z0_slab_offset():
 
     from repro.core.backproject import GeomStatic
     from repro.core.pipeline import reconstruct_shards
+    from repro.dispatch import ExecutionPlan
 
     geom = Geometry().scaled(16, n_proj=2)
     projs, mats, _ = make_dataset(geom)
@@ -83,11 +84,11 @@ def test_reconstruct_shards_z0_slab_offset():
     full = np.asarray(reconstruct(filt, mats, geom))
     gs = GeomStatic.of(geom)
     half = geom.L // 2
-    opts_tuple = ()
-    lo = reconstruct_shards(filt, mats, gs, "strip2", opts_tuple,
+    plan = ExecutionPlan.explicit("strip2")
+    lo = reconstruct_shards(filt, mats, gs, plan,
                             jnp.zeros((half,) + (geom.L,) * 2,
                                       jnp.float32))
-    hi = reconstruct_shards(filt, mats, gs, "strip2", opts_tuple,
+    hi = reconstruct_shards(filt, mats, gs, plan,
                             jnp.zeros((half,) + (geom.L,) * 2,
                                       jnp.float32), z0=half)
     np.testing.assert_array_equal(np.asarray(lo), full[:half])

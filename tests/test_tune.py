@@ -63,17 +63,27 @@ def test_auto_follows_tuned_cache(ct_case):
 
 def test_auto_filters_mismatched_caller_opts(ct_case):
     """Options written for the fallback strategy must not crash when the
-    cache tuned a different one (sample_onehot(gband=...) TypeError)."""
+    cache tuned a different one (sample_onehot(gband=...) TypeError) —
+    and the shed is *loud*: a RuntimeWarning names the dropped key."""
     filt, mats = ct_case
     backend, device_kind = device_identity()
     cfg = TunedConfig(strategy="onehot", opts={"vox_block": 64},
                       backend=backend, device_kind=device_kind,
                       us_per_call=1.0)
     store_tuned(GS, cfg)
-    a = np.asarray(reconstruct(filt, mats, GEOM, strategy="auto", gband=8))
+    with pytest.warns(RuntimeWarning, match="gband"):
+        a = np.asarray(reconstruct(filt, mats, GEOM, strategy="auto",
+                                   gband=8))
     b = np.asarray(reconstruct(filt, mats, GEOM, strategy="onehot",
                                vox_block=64))
     np.testing.assert_array_equal(a, b)
+
+
+def test_unknown_caller_opt_raises(ct_case):
+    """A typo'd option is an error, not a silent no-op."""
+    filt, mats = ct_case
+    with pytest.raises(ValueError, match="unknown option"):
+        reconstruct(filt, mats, GEOM, strategy="strip2", gbnad=8)
 
 
 def test_autotune_sweeps_and_persists_roundtrip():
