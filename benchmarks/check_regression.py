@@ -11,7 +11,7 @@ run) passes with a notice: the gate compares like with like or not at
 all.
 
 ``python -m benchmarks.check_regression --baseline BENCH_ct.json \
-    --fresh bench.json [--threshold 4.0] [--min-us 200]``
+    --fresh bench.json [--threshold 2.5] [--min-us 2500]``
 
 Exit status: 0 = no regression (or nothing comparable), 1 = at least
 one row regressed past the threshold, 2 = bad invocation/unreadable
@@ -24,6 +24,15 @@ import argparse
 import json
 import sys
 from pathlib import Path
+
+# The gate parameters — ONE source of truth, used both as the CLI
+# defaults below and by .github/workflows/ci.yml (which passes no
+# overrides), so a local ``python -m benchmarks.check_regression`` run
+# reaches the same verdict CI does.  2.5x absorbs shared-runner noise
+# without masking a real 3x cliff; rows whose baseline median is under
+# 2.5 ms are timer noise on those runners and are skipped outright.
+GATE_THRESHOLD = 2.5
+GATE_MIN_US = 2500.0
 
 
 def _load_runs(path: str) -> list[dict] | None:
@@ -99,9 +108,9 @@ def main(argv=None) -> None:
                     help="committed trajectory (BENCH_ct.json)")
     ap.add_argument("--fresh", required=True,
                     help="just-produced --json file to gate")
-    ap.add_argument("--threshold", type=float, default=4.0,
+    ap.add_argument("--threshold", type=float, default=GATE_THRESHOLD,
                     help="fail when fresh > threshold * baseline")
-    ap.add_argument("--min-us", type=float, default=200.0,
+    ap.add_argument("--min-us", type=float, default=GATE_MIN_US,
                     help="skip rows whose baseline is below this (noise)")
     args = ap.parse_args(argv)
 

@@ -64,8 +64,12 @@ def run(L: int | None = None):
         # decision; a fresh dispatcher hits disk once, then the memo.
         clear_memory_cache()
         disp = Dispatcher(insitu=False)
+        # Gate-feeding rows sample with min_total_s=0.3 (PR 6 rule):
+        # every row the regression gate may compare must integrate at
+        # least 0.3 s of samples, or its median is runner noise and the
+        # gate threshold gates jitter instead of code.
         warm_s = time_fn(disp.resolve, geom, warmup=2, iters=20,
-                         min_total_s=0.05)
+                         min_total_s=0.3)
         assert disp.resolve(geom) == plan
         emit("fig1/dispatch/warm", warm_s * 1e6,
              f"L={L} nproj={n_proj} winner={plan.label}")

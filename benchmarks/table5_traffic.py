@@ -13,8 +13,10 @@ makes the dominant traffic terms explicit:
   unit), where the window unit is whatever the *executed* configuration
   says — ``(gband, gwidth)`` per ``group`` voxels for the jnp ``strip2``
   rows, ``(band, width)`` per ``(ty, chunk)`` tile for the kernel path,
-  ``× 0.5`` when the wire dtype is bf16, and a per-*group* superset
-  window for the shared-window kernel.
+  ``× 0.5`` when the wire dtype is bf16, ``× 0.25`` plus the
+  once-per-projection scale sideband when it is int8
+  (:func:`scale_sideband_bytes`), and a per-*group* superset window for
+  the shared-window kernel.
 
 An earlier revision hard-coded the kernel tile ``(8, 32, 16, 128)`` into
 the strip term of every row while the timed rows ran the jnp ``strip2``
@@ -38,7 +40,19 @@ from repro.core.quality import psnr, roi_mask
 from .common import bench_size, ct_problem, emit, record_extra, time_fn
 from .fig1_single_device import PBATCHES
 
-_ITEMSIZE = {"float32": 4, "bfloat16": 2}
+_ITEMSIZE = {"float32": 4, "bfloat16": 2, "int8": 1}
+
+
+def scale_sideband_bytes(geom, n_proj: int) -> int:
+    """Modelled int8-wire scale/offset sideband: 8 bytes (two f32) per
+    padded detector row per projection, counted ONCE per projection —
+    the ``(2, rows)`` scale block is fetched whole and stays VMEM- (or
+    cache-) resident across every window of its projection (the Pallas
+    wrappers pin it with a constant-index BlockSpec), unlike the strip
+    windows, which are re-fetched per window unit.  Charging it per
+    window would model a fetch pattern nothing executes.
+    """
+    return n_proj * (geom.n_v + 2) * 8
 
 
 def volume_bytes(L: int, n_proj: int, pbatch: int) -> int:
@@ -58,11 +72,15 @@ def strip_bytes(geom, strategy: str, opts: dict,
     geometry-clamped dims), at the wire itemsize.  The windowless
     strategies (``scalar``/``gather``/``onehot``) are modelled as their
     four scattered bilinear taps per voxel.  Independent of ``pbatch``
-    — batching cuts only the volume term.
+    — batching cuts only the volume term.  The int8 wire adds its
+    per-projection scale sideband (:func:`scale_sideband_bytes`) on top
+    of the 1-byte windows — codes + scales, nothing hidden.
     """
     L = geom.L
     n_proj = geom.n_proj if n_proj is None else n_proj
-    itemsize = _ITEMSIZE[str(opts.get("strip_dtype", "float32"))]
+    dtype = str(opts.get("strip_dtype", "float32"))
+    itemsize = _ITEMSIZE[dtype]
+    sideband = scale_sideband_bytes(geom, n_proj) if dtype == "int8" else 0
     if strategy == "strip2":
         group = _divisor_at_most(L, int(opts.get("group", 8)))
         band = min(int(opts.get("gband", 8)), geom.n_v + 2)
@@ -74,10 +92,10 @@ def strip_bytes(geom, strategy: str, opts: dict,
         width = min(int(opts.get("width", 512)), geom.n_u + 2)
         windows = L * L * (L // chunk)
     elif strategy in ("scalar", "gather", "onehot"):
-        return n_proj * L ** 3 * 4 * itemsize
+        return n_proj * L ** 3 * 4 * itemsize + sideband
     else:
         raise ValueError(f"unknown strategy {strategy!r}")
-    return n_proj * windows * band * width * itemsize
+    return n_proj * windows * band * width * itemsize + sideband
 
 
 def pallas_strip_bytes(geom, *, ty: int, chunk: int, band: int, width: int,
@@ -146,6 +164,25 @@ def run(L: int | None = None, n_proj: int | None = None):
     emit("table5/bf16", t * 1e6,
          f"vol_mb={vb / 1e6:.3f} strip_mb={sb_bf / 1e6:.3f} "
          f"strip_reduction={sb / sb_bf:.2f} psnr_roi_db={psnr_db:.1f} "
+         f"pbatch={pb_bf} L={L} nproj={n_proj}")
+
+    # int8 on the wire (ROADMAP lever (b)): the same strip2 row again
+    # at 1 byte/pixel codes plus the per-row scale sideband — the
+    # modelled bytes count codes + scales, and the quality cost is
+    # measured the same way as bf16's (ROI PSNR vs the f32 volume;
+    # tests/test_strip_dtype.py asserts the > 35 dB floor).
+    i8_opts = {"strip_dtype": "int8"}
+    sb_i8 = strip_bytes(geom, "strip2", i8_opts, n_proj=n_proj)
+    t = time_fn(reconstruct, filt, mats, geom, strategy="strip2",
+                pbatch=pb_bf, warmup=1, iters=2, min_total_s=0.3,
+                **i8_opts)
+    vol8 = np.asarray(reconstruct(filt, mats, geom, strategy="strip2",
+                                  pbatch=pb_bf, **i8_opts))
+    psnr_i8_db = float(psnr(vol8, vol32, roi_mask(L)))
+    emit("table5/int8", t * 1e6,
+         f"vol_mb={vb / 1e6:.3f} strip_mb={sb_i8 / 1e6:.3f} "
+         f"strip_reduction={sb / sb_i8:.2f} vs_bf16={sb_bf / sb_i8:.2f} "
+         f"psnr_roi_db={psnr_i8_db:.1f} "
          f"pbatch={pb_bf} L={L} nproj={n_proj}")
 
     # The autotuner's decision for this geometry (fig1 runs the sweep
@@ -224,6 +261,23 @@ def run(L: int | None = None, n_proj: int | None = None):
          f"sband={sband} swidth={swidth} "
          f"dma_reduction={pbk:.2f} pbatch={pbk} L={Lk} nproj={n_proj}")
 
+    # Shared superset window + int8 wire: the slab DMA at 1 byte/pixel
+    # plus the once-per-projection scale sideband (the scale block is
+    # VMEM-resident per kernel call, not re-fetched per window).
+    t = time_fn(pallas_backproject_batch, vol0_k, filt_k, mats_k, geom_k,
+                ty=sty, chunk=schunk, pbatch=pbk, shared_window=True,
+                strip_dtype="int8", warmup=1, iters=2,
+                min_total_s=0.3)
+    kb_shared_i8, dmas_i8 = shared_window_traffic(
+        geom_k, ty=sty, chunk=schunk, band=sband, width=swidth,
+        pbatch=pbk, itemsize=_ITEMSIZE["int8"], n_proj=n_proj)
+    kb_shared_i8 += scale_sideband_bytes(geom_k, n_proj)
+    emit("table5/shared_int8", t * 1e6,
+         f"strip_mb={kb_shared_i8 / 1e6:.3f} strip_dmas={dmas_i8} "
+         f"sband={sband} swidth={swidth} "
+         f"vs_bf16={kb_shared / kb_shared_i8:.2f} "
+         f"dma_reduction={pbk:.2f} pbatch={pbk} L={Lk} nproj={n_proj}")
+
     record_extra("table5_traffic", {
         "L": L, "n_proj": n_proj, "chosen_pbatch": chosen,
         "chosen_strategy": chosen_strategy,
@@ -234,6 +288,10 @@ def run(L: int | None = None, n_proj: int | None = None):
         "strip_bytes_bf16": sb_bf,
         "strip_reduction_bf16": sb / sb_bf,
         "bf16_psnr_roi_db": psnr_db,
+        "strip_bytes_int8": sb_i8,
+        "strip_reduction_int8": sb / sb_i8,
+        "int8_vs_bf16": sb_bf / sb_i8,
+        "int8_psnr_roi_db": psnr_i8_db,
         "strip_bytes_chosen": sb_chosen,
         "kernel_model": {"ty": kty, "chunk": kchunk, "band": kband,
                          "width": kwidth, "strip_dtype": pdtype,
@@ -242,6 +300,7 @@ def run(L: int | None = None, n_proj: int | None = None):
                           "shared_width": swidth,
                           "strip_bytes": kb_shared,
                           "strip_bytes_per_projection_bf16": kb_per_proj,
+                          "strip_bytes_int8": kb_shared_i8,
                           "strip_dmas": dmas,
                           "dma_reduction": pbk},
         "per_pbatch": {str(k): v for k, v in rows.items()},

@@ -48,6 +48,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.quant import RowQuant, quantize_rows
+
 from .geometry import Geometry
 
 __all__ = [
@@ -80,8 +82,14 @@ STRATEGIES = ("scalar", "gather", "onehot", "strip", "strip2")
 # never inserts so much as a no-op ``astype``.  bf16 halves strip HBM/
 # VMEM bytes; the one-hot interpolation always upcasts the window back
 # to f32 and accumulates in f32, so the only quality loss is the bf16
-# rounding of the strip values themselves (~8 mantissa bits).
-_STRIP_WIRE_DTYPES = {"float32": None, "bfloat16": jnp.bfloat16}
+# rounding of the strip values themselves (~8 mantissa bits).  int8
+# quarters them: the padded image is encoded ONCE at pad time into
+# per-row affine codes + f32 scale/offset (``repro.quant``, error
+# feedback along each row), windows move at 1 byte/pixel, and the
+# samplers dequantise *after* the gather next to the f32 accumulator
+# (DESIGN.md §12).
+_STRIP_WIRE_DTYPES = {"float32": None, "bfloat16": jnp.bfloat16,
+                      "int8": jnp.int8}
 
 
 def strip_wire_dtype(strip_dtype: str):
@@ -283,9 +291,24 @@ def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
     (halving strip bytes); the one-hot mix upcasts back to f32 and
     accumulates in f32, so only the tap *values* are rounded.  The
     default f32 path is bitwise-identical to the pre-option code.
+    ``strip_dtype="int8"`` moves per-row affine codes (1 byte/pixel;
+    ``padded`` may be a pre-encoded :class:`repro.quant.RowQuant` from
+    the drivers' pad-time encode) and dequantises the window *after*
+    the gather, at the same f32 dot the bf16 upcast uses.
     """
     wire = strip_wire_dtype(strip_dtype)
-    if wire is not None:
+    quant = None
+    if wire is jnp.int8:
+        # Drivers encode once at pad time; a direct caller handing a
+        # plain array pays the (per-call) encode here instead.
+        quant = padded if isinstance(padded, RowQuant) \
+            else quantize_rows(padded)
+        padded = quant.codes
+    elif isinstance(padded, RowQuant):
+        raise TypeError(
+            f"RowQuant-encoded image requires strip_dtype='int8'; got "
+            f"{strip_dtype!r}")
+    elif wire is not None:
         padded = padded.astype(wire)
     L = gs.L
     assert ix.shape == (L, L)
@@ -323,7 +346,15 @@ def sample_strip(padded, ix, iy, gs: GeomStatic, *, chunk: int = 128,
                       + (wiota == creli[:, None] + 1) * sxi[:, None])
             if wire is None:
                 rowmix = rowsel.astype(padded.dtype) @ strip
-            else:                       # f32 weights x bf16 strip -> f32
+            else:
+                if quant is not None:   # int8: dequant after the gather
+                    scl = jax.lax.dynamic_slice(quant.scale, (r0i,),
+                                                (band,))
+                    off = jax.lax.dynamic_slice(quant.offset, (r0i,),
+                                                (band,))
+                    strip = (strip.astype(jnp.float32) * scl[:, None]
+                             + off[:, None])
+                # f32 weights x (bf16 | dequantised) strip -> f32
                 rowmix = jax.lax.dot_general(
                     rowsel, strip.astype(jnp.float32),
                     (((1,), (0,)), ((), ())),
@@ -359,10 +390,21 @@ def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
     geometries at L>=48; 8 covers every geometry in the repo's sweeps.)
 
     ``strip_dtype="bfloat16"``: bf16 windows on the wire, f32 upcast at
-    the one-hot mix, f32 accumulate (see :func:`sample_strip`).
+    the one-hot mix, f32 accumulate; ``strip_dtype="int8"``: per-row
+    affine codes on the wire, dequantised after the gather (see
+    :func:`sample_strip`).
     """
     wire = strip_wire_dtype(strip_dtype)
-    if wire is not None:
+    quant = None
+    if wire is jnp.int8:
+        quant = padded if isinstance(padded, RowQuant) \
+            else quantize_rows(padded)
+        padded = quant.codes
+    elif isinstance(padded, RowQuant):
+        raise TypeError(
+            f"RowQuant-encoded image requires strip_dtype='int8'; got "
+            f"{strip_dtype!r}")
+    elif wire is not None:
         padded = padded.astype(wire)
     L = gs.L
     group = _divisor_at_most(L, group)
@@ -395,7 +437,15 @@ def sample_strip2(padded, ix, iy, gs: GeomStatic, *, group: int = 8,
                       + (wiota == creli[:, None] + 1) * sxi[:, None])
             if wire is None:
                 rowmix = rowsel.astype(padded.dtype) @ win
-            else:                       # f32 weights x bf16 win -> f32
+            else:
+                if quant is not None:   # int8: dequant after the gather
+                    scl = jax.lax.dynamic_slice(quant.scale, (r0i,),
+                                                (gband,))
+                    off = jax.lax.dynamic_slice(quant.offset, (r0i,),
+                                                (gband,))
+                    win = (win.astype(jnp.float32) * scl[:, None]
+                           + off[:, None])
+                # f32 weights x (bf16 | dequantised) window -> f32
                 rowmix = jax.lax.dot_general(
                     rowsel, win.astype(jnp.float32),
                     (((1,), (0,)), ((), ())),
@@ -442,6 +492,24 @@ def accumulate(plane, val, w, clip_mask=None):
 
 def _pad_image(image):
     return jnp.pad(image, ((1, 1), (1, 1)))
+
+
+def _wire_padded(padded, opts):
+    """Encode the padded image(s) once at pad time for the int8 wire.
+
+    The drivers call this right after :func:`_pad_image`, *outside* the
+    z-plane ``fori_loop`` — the encode (a ``lax.scan`` along each row's
+    columns carrying the error-feedback residual) is loop-invariant but
+    XLA will not hoist it out of a ``while``, so it must happen here,
+    not inside the samplers.  Every other wire dtype passes through
+    untouched (the f32 path stays bitwise-identical; bf16 casts inside
+    the samplers as before).
+    """
+    if opts.get("strip_dtype") != "int8":
+        return padded
+    if padded.ndim == 3:                # stacked projections
+        return jax.vmap(quantize_rows)(padded)
+    return quantize_rows(padded)
 
 
 def _sample(strategy, image, padded, ix, iy, gs, opts):
@@ -504,7 +572,7 @@ def _explicit_plan(strategy: str, opts: dict, pbatch: int | None = None):
 @functools.partial(jax.jit, static_argnames=("gs", "plan"))
 def _backproject_one_jit(volume, image, A, gs, plan):
     opts = plan.jnp_opts()
-    padded = _pad_image(image)
+    padded = _wire_padded(_pad_image(image), opts)
 
     def body(z, vol):
         plane = jax.lax.dynamic_index_in_dim(vol, z, axis=0, keepdims=False)
@@ -534,7 +602,7 @@ def _backproject_batch_body(volume, images, mats, gs: GeomStatic, plan,
     the resolved :class:`repro.dispatch.ExecutionPlan`.  Callers jit.
     """
     strategy, opts = plan.strategy, plan.jnp_opts()
-    padded = jax.vmap(_pad_image)(images)
+    padded = _wire_padded(jax.vmap(_pad_image)(images), opts)
 
     def body(zi, vol):
         plane = jax.lax.dynamic_index_in_dim(vol, zi, axis=0, keepdims=False)
@@ -554,20 +622,31 @@ def _stream_batches(projections, matrices, volume, pbatch: int, call):
     n_proj`` remainder runs as one final smaller batch — shapes are
     static because ``n_proj`` is known at trace time.  ``call(vol, imgs,
     mats)`` performs one volume pass for one batch.
+
+    ``projections`` may be any pytree whose leaves share the leading
+    projection axis (a plain stacked array, or the ``(codes, scales)``
+    pair the int8 kernel wire streams) — each batch is the same
+    leading-axis slice of every leaf.  A bare array is a single leaf,
+    so the f32 path lowers to the identical ``dynamic_slice`` as
+    before.
     """
-    n_proj = projections.shape[0]
+    n_proj = jax.tree.leaves(projections)[0].shape[0]
     pbatch = max(1, min(int(pbatch), n_proj)) if n_proj else 1
     n_full = n_proj // pbatch
 
     def body(b, vol):
-        imgs = jax.lax.dynamic_slice_in_dim(projections, b * pbatch, pbatch)
+        imgs = jax.tree.map(
+            lambda a: jax.lax.dynamic_slice_in_dim(a, b * pbatch, pbatch),
+            projections)
         mats = jax.lax.dynamic_slice_in_dim(matrices, b * pbatch, pbatch)
         return call(vol, imgs, mats)
 
     if n_full:
         volume = jax.lax.fori_loop(0, n_full, body, volume)
     if n_proj - n_full * pbatch:
-        volume = call(volume, projections[n_full * pbatch:],
+        volume = call(volume,
+                      jax.tree.map(lambda a: a[n_full * pbatch:],
+                                   projections),
                       matrices[n_full * pbatch:])
     return volume
 

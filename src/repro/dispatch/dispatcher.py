@@ -56,13 +56,14 @@ INSITU_ENV = "REPRO_DISPATCH_INSITU"
 _JNP_PREFERENCE = ("strip2", "gather", "strip", "onehot", "scalar")
 
 
-def insitu_candidates(gs: GeomStatic, *, topk: int = 6,
+def insitu_candidates(gs: GeomStatic, *, topk: int = 7,
                       include_pallas: bool = False) -> list[Candidate]:
     """Deterministic first-call shortlist for one geometry.
 
     One representative per jnp strategy family (first tile point of
     :func:`jnp_candidates` at :data:`DEFAULT_PBATCH`, preference-ordered)
-    plus the bf16-wire strip2 competitor, truncated to ``topk``; with
+    plus the bf16- and int8-wire strip2 competitors, truncated to
+    ``topk``; with
     ``include_pallas`` the projection-batched kernel variants ride along
     (their own ``topk`` budget).  Purely a function of ``gs`` — two
     processes shortlist identically, so selection is reproducible.
@@ -74,6 +75,7 @@ def insitu_candidates(gs: GeomStatic, *, topk: int = 6,
         by_key.setdefault((cand.strategy, dtype), cand)
     order = [(s, "float32") for s in _JNP_PREFERENCE]
     order.append(("strip2", "bfloat16"))
+    order.append(("strip2", "int8"))
     picked = [by_key[k] for k in order if k in by_key][:topk]
     if include_pallas:
         batched = [c for c in pallas_candidates(gs,
@@ -94,7 +96,7 @@ class Dispatcher:
     """
 
     def __init__(self, *, dirpath=None, insitu: bool | None = None,
-                 topk: int = 6, include_pallas: bool | None = None,
+                 topk: int = 7, include_pallas: bool | None = None,
                  sweep_fn=None, backend: str | None = None,
                  device_kind: str | None = None):
         self.dirpath = dirpath

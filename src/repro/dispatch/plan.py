@@ -78,6 +78,12 @@ class ExecutionPlan(NamedTuple):
         opts = filter_strategy_opts(strategy, opts, strict=True,
                                     context=f"strategy={strategy!r}")
         opts.pop("pbatch", None)
+        if "strip_dtype" in opts:
+            # Loud on typos at plan construction, before any tracing —
+            # the same wire-dtype table every sampler resolves through.
+            from repro.core.backproject import strip_wire_dtype
+
+            strip_wire_dtype(str(opts["strip_dtype"]))
         return cls(strategy=strategy, opts=tuple(sorted(opts.items())),
                    pbatch=max(1, int(pbatch)))
 
@@ -101,6 +107,12 @@ class ExecutionPlan(NamedTuple):
             pbatch = int(merged.pop("pbatch", DEFAULT_PBATCH))
         else:
             merged.pop("pbatch", None)
+        if "strip_dtype" in merged:
+            # Same loud validation as ``explicit`` — a corrupt cache
+            # entry must fail at plan construction, not mid-trace.
+            from repro.core.backproject import strip_wire_dtype
+
+            strip_wire_dtype(str(merged["strip_dtype"]))
         pallas = None
         if cfg.pallas:
             pallas = tuple(sorted(

@@ -13,7 +13,9 @@ paper's scaling sections run into at mesh scale:
   :func:`compress_psum` moves int8 codes plus one scalar scale and
   keeps the quantisation residual on-device as *error feedback*, so the
   running average of compressed reductions converges to the true mean
-  (tests/test_distributed.py::test_compress_psum_error_feedback).
+  (tests/test_distributed.py::test_compress_psum_error_feedback).  The
+  quantise-with-residual step itself is :func:`repro.quant.quantize_ef`
+  — shared with the ``strip_dtype="int8"`` detector wire.
 """
 
 from __future__ import annotations
@@ -75,13 +77,17 @@ def compress_psum(tree, axis: str, error_tree):
     Returns ``(mean_tree, new_error_tree)``; wire bytes per element are
     1 (codes) instead of 4, plus one fp32 scale per leaf.
     """
+    from repro.quant import quantize_ef
+
     def one(g, e):
-        x = g.astype(jnp.float32) + e.astype(jnp.float32)
-        amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+        amax = jax.lax.pmax(
+            jnp.max(jnp.abs(g.astype(jnp.float32)
+                            + e.astype(jnp.float32))), axis)
         scale = jnp.maximum(amax, 1e-30) / 127.0
-        q = jnp.clip(jnp.round(x / scale), -127, 127)
-        dequant = q * scale
-        new_e = x - dequant
+        # The shared EF primitive (repro.quant): quantise g + e on the
+        # symmetric grid, carry the residual forward.
+        q, new_e = quantize_ef(g.astype(jnp.float32), scale,
+                               error=e.astype(jnp.float32))
         # int8 moves on the wire (an all-gather of codes); the sum runs
         # locally in int32.  A psum would widen the codes to 4 bytes and
         # erase the whole point of quantising.

@@ -138,6 +138,30 @@ def _tile_active(ix, iy, w, n_u, n_v):
             & (jnp.max(w) > _EPS_W))
 
 
+def _dequant_strip(strip, scl_ref, r0, band, p=None):
+    """Decode an int8 code strip in-register, next to the accumulator.
+
+    ``scl_ref`` is the per-detector-row scale block, VMEM-resident for
+    the whole kernel: ``scl_ref[0] = scale``, ``scl_ref[1] = offset``
+    per padded row (stacked ``(P, 2, rows)`` in the batch kernels,
+    indexed by ``p``), so ``value = code * scale[row] + offset[row]``.
+    ``scl_ref=None`` means the wire is not quantised and the strip
+    passes through untouched — every variant calls this unconditionally
+    and the f32 path traces to a no-op.  Dequantisation happens *here*,
+    after the DMA: only 1-byte codes ever move on the strip wire, and
+    only the resident ``(band, width)`` window widens to f32.
+    """
+    if scl_ref is None:
+        return strip
+    if p is None:
+        scl = scl_ref[0, pl.ds(r0, band)]
+        off = scl_ref[1, pl.ds(r0, band)]
+    else:
+        scl = scl_ref[p, 0, pl.ds(r0, band)]
+        off = scl_ref[p, 1, pl.ds(r0, band)]
+    return strip.astype(jnp.float32) * scl[:, None] + off[:, None]
+
+
 def _tile_contrib(get_strip, ix, iy, r, r0, c0, *, ty, chunk, band, width):
     """Parts 2+3 for one tile against a resident (band, width) strip.
 
@@ -179,16 +203,22 @@ def _tile_contrib(get_strip, ix, iy, r, r0, c0, *, ty, chunk, band, width):
     return val.reshape(ty, chunk) * (r * r)
 
 
-def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
-                       strip_ref, sem,
-                       *, o_mm, n_u, n_v, ty, chunk, band, width):
+def backproject_kernel(A_ref, img_ref, *refs,
+                       o_mm, n_u, n_v, ty, chunk, band, width,
+                       quantized=False):
     """One grid step: back-project one projection into a (1, TY, CHUNK)
     volume tile.
 
     Refs: ``A_ref`` (3,4) f32 in SMEM; ``img_ref`` zero-padded projection
-    in ANY/HBM; ``vol_in/out`` aliased volume tile in VMEM; ``strip_ref``
-    VMEM scratch; ``sem`` DMA semaphore.
+    in ANY/HBM; with ``quantized=True`` a ``(2, rows)`` per-row scale
+    block in VMEM follows (``img_ref`` then holds int8 codes); then the
+    aliased ``vol_in/out`` volume tile in VMEM, ``strip_ref`` VMEM
+    scratch, ``sem`` DMA semaphore.
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, strip_ref, sem = refs
     z = pl.program_id(0)
     y0 = (pl.program_id(1) * ty).astype(jnp.float32)
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
@@ -207,7 +237,7 @@ def backproject_kernel(A_ref, img_ref, vol_in_ref, vol_out_ref,
 
         def strip():
             copy.wait()
-            return strip_ref[...]
+            return _dequant_strip(strip_ref[...], scl_ref, r0, band)
 
         contrib = _tile_contrib(strip, ix, iy, r, r0, c0,
                                 ty=ty, chunk=chunk, band=band, width=width)
@@ -286,10 +316,9 @@ def _micro_tile_accumulate(wait_strip, read_window, update, ix, iy, r, *,
     jax.lax.fori_loop(0, n_groups, one_group, 0)
 
 
-def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
-                             strip_ref, sem,
-                             *, o_mm, n_u, n_v, ty, chunk, band, width,
-                             group, gband, gwidth):
+def backproject_kernel_micro(A_ref, img_ref, *refs,
+                             o_mm, n_u, n_v, ty, chunk, band, width,
+                             group, gband, gwidth, quantized=False):
     """Micro-window variant (hillclimb CT-5): strip DMA as usual, but the
     tap selection runs per ``group``-voxel micro-window instead of one
     tile-wide banded matmul.
@@ -303,6 +332,10 @@ def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
     as the jnp ``strip2`` strategy, now at kernel level where the strip
     load is a DMA rather than an XLA gather.
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, strip_ref, sem = refs
     z = pl.program_id(0)
     y0 = (pl.program_id(1) * ty).astype(jnp.float32)
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
@@ -326,8 +359,11 @@ def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
 
         _micro_tile_accumulate(
             copy.wait,
-            lambda r0g, c0g: strip_ref[pl.ds(r0g, gband),
-                                       pl.ds(c0g, gwidth)],
+            # Dequant per micro-window at its *global* row origin
+            # r0 + r0g — the scale block indexes padded detector rows.
+            lambda r0g, c0g: _dequant_strip(
+                strip_ref[pl.ds(r0g, gband), pl.ds(c0g, gwidth)],
+                scl_ref, r0 + r0g, gband),
             update, ix, iy, r, r0=r0, c0=c0, ty=ty, chunk=chunk,
             band=band, width=width, group=group, gband=gband,
             gwidth=gwidth)
@@ -337,10 +373,9 @@ def backproject_kernel_micro(A_ref, img_ref, vol_in_ref, vol_out_ref,
         vol_out_ref[...] = vol_in_ref[...]
 
 
-def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
-                          strip_ref, sems,
-                          *, o_mm, n_u, n_v, ty, chunk, band, width,
-                          grid_dims, depth=2):
+def backproject_kernel_db(A_ref, img_ref, *refs,
+                          o_mm, n_u, n_v, ty, chunk, band, width,
+                          grid_dims, depth=2, quantized=False):
     """Double-buffered variant: the strip DMA for grid step ``k+1`` is
     issued before step ``k``'s compute (hillclimb CT-3), generalised to
     a ``depth``-slot rotation running ``depth - 1`` fetches ahead.
@@ -363,6 +398,10 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
     just to floor two minima), so producer and consumer agree by
     construction.
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, strip_ref, sems = refs
     nz, ny, nc = grid_dims
     z = pl.program_id(0)
     yb = pl.program_id(1)
@@ -418,7 +457,7 @@ def backproject_kernel_db(A_ref, img_ref, vol_in_ref, vol_out_ref,
     def _():
         def strip():
             wait_strip()
-            return strip_ref[slot]
+            return _dequant_strip(strip_ref[slot], scl_ref, r0, band)
 
         contrib = _tile_contrib(strip, ix, iy, r, r0, c0,
                                 ty=ty, chunk=chunk, band=band, width=width)
@@ -446,10 +485,11 @@ def _batch_strip_loop(A_ref, imgs_ref, strip_ref, sems, consume, *,
     strip is DMA'd and waited unconditionally (clamped origins are
     always in-bounds) so the semaphores balance; off-detector
     projections contribute zero through the all-zero one-hot rows and
-    the ``r²`` mask.  ``consume(slot, wait_strip, ix, iy, r, r0, c0)``
-    runs under the active flag and folds projection ``p``'s
+    the ``r²`` mask.  ``consume(p, slot, wait_strip, ix, iy, r, r0,
+    c0)`` runs under the active flag and folds projection ``p``'s
     contribution into the caller's accumulator (calling ``wait_strip``
-    once its selectors are built, so the copy overlaps them).
+    once its selectors are built, so the copy overlaps them; ``p`` lets
+    the int8 consumers pick projection ``p``'s scale rows).
     """
     pad_rows = imgs_ref.shape[1]
     pad_cols = imgs_ref.shape[2]
@@ -494,7 +534,7 @@ def _batch_strip_loop(A_ref, imgs_ref, strip_ref, sems, consume, *,
 
         @pl.when(active)
         def _():
-            consume(slot, wait_strip, ix, iy, r, r0, c0)
+            consume(p, slot, wait_strip, ix, iy, r, r0, c0)
 
         @pl.when(jnp.logical_not(active))
         def _():
@@ -505,35 +545,40 @@ def _batch_strip_loop(A_ref, imgs_ref, strip_ref, sems, consume, *,
     jax.lax.fori_loop(0, pbatch, body, (r0_first, c0_first))
 
 
-def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
-                             strip_ref, acc_ref, sems,
-                             *, o_mm, n_u, n_v, ty, chunk, band, width,
-                             pbatch):
+def backproject_kernel_batch(A_ref, imgs_ref, *refs,
+                             o_mm, n_u, n_v, ty, chunk, band, width,
+                             pbatch, quantized=False):
     """Projection-batched grid step: the ``(1, ty, chunk)`` volume tile
     stays resident in VMEM while an in-kernel ``fori_loop`` folds in
     ``pbatch`` projections — the inverted loop nest (DESIGN.md §7).
 
     Refs: ``A_ref`` stacked ``(pbatch, 3, 4)`` f32 in SMEM; ``imgs_ref``
     stacked zero-padded projections ``(pbatch, rows, cols)`` in ANY/HBM;
-    ``vol_in/out`` aliased volume tile; ``strip_ref`` ``(2, band,
-    width)`` VMEM scratch; ``acc_ref`` ``(ty, chunk)`` f32 accumulator;
-    ``sems`` 2 DMA semaphores.
+    with ``quantized=True`` a ``(pbatch, 2, rows)`` scale block in VMEM
+    follows (``imgs_ref`` then holds int8 codes); then the aliased
+    ``vol_in/out`` volume tile, ``strip_ref`` ``(2, band, width)`` VMEM
+    scratch, ``acc_ref`` ``(ty, chunk)`` f32 accumulator, ``sems`` 2
+    DMA semaphores.
 
     The volume tile is loaded once and stored once per ``pbatch``
     projections — volume HBM traffic drops by the batch factor versus
     the per-projection kernels.  The strip DMA discipline lives in
     :func:`_batch_strip_loop` (shared with the micro variant).
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, strip_ref, acc_ref, sems = refs
     z = pl.program_id(0)
     y0 = (pl.program_id(1) * ty).astype(jnp.float32)
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
 
     acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
 
-    def consume(slot, wait_strip, ix, iy, r, r0, c0):
+    def consume(p, slot, wait_strip, ix, iy, r, r0, c0):
         def strip():
             wait_strip()
-            return strip_ref[slot]
+            return _dequant_strip(strip_ref[slot], scl_ref, r0, band, p)
 
         acc_ref[...] += _tile_contrib(
             strip, ix, iy, r, r0, c0, ty=ty, chunk=chunk, band=band,
@@ -546,10 +591,9 @@ def backproject_kernel_batch(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
     vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
 
-def backproject_kernel_batch_db(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
-                                strip_ref, acc_ref, sems,
-                                *, o_mm, n_u, n_v, ty, chunk, band, width,
-                                pbatch, depth, grid_dims):
+def backproject_kernel_batch_db(A_ref, imgs_ref, *refs,
+                                o_mm, n_u, n_v, ty, chunk, band, width,
+                                pbatch, depth, grid_dims, quantized=False):
     """Deep-pipelined batched grid step: the strip DMA stream runs
     ``depth - 1`` fetches ahead of compute through a ``depth``-slot
     rotation, across *both* the in-kernel projection ``fori_loop`` and
@@ -575,6 +619,10 @@ def backproject_kernel_batch_db(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
     issued and one waited per sequence index (`t < total` guards both
     ends), and every wait recomputes the same origin the issuer used.
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, strip_ref, acc_ref, sems = refs
     nz, ny, nc = grid_dims
     z = pl.program_id(0)
     yb = pl.program_id(1)
@@ -647,7 +695,8 @@ def backproject_kernel_batch_db(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
         def _():
             def strip():
                 wait_strip()
-                return strip_ref[slot]
+                return _dequant_strip(strip_ref[slot], scl_ref, r0,
+                                      band, p)
 
             acc_ref[...] += _tile_contrib(
                 strip, ix, iy, r, r0, c0, ty=ty, chunk=chunk, band=band,
@@ -662,10 +711,10 @@ def backproject_kernel_batch_db(A_ref, imgs_ref, vol_in_ref, vol_out_ref,
     vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
 
-def backproject_kernel_batch_micro(A_ref, imgs_ref, vol_in_ref,
-                                   vol_out_ref, strip_ref, acc_ref, sems,
-                                   *, o_mm, n_u, n_v, ty, chunk, band,
-                                   width, pbatch, group, gband, gwidth):
+def backproject_kernel_batch_micro(A_ref, imgs_ref, *refs,
+                                   o_mm, n_u, n_v, ty, chunk, band,
+                                   width, pbatch, group, gband, gwidth,
+                                   quantized=False):
     """Micro-window batched grid step: the volume tile stays resident
     across the in-kernel projection loop exactly as in
     :func:`backproject_kernel_batch` (same strip DMA double-buffering,
@@ -675,21 +724,26 @@ def backproject_kernel_batch_micro(A_ref, imgs_ref, vol_in_ref,
     the §7 traffic cut, so the tuner's fastest single-projection compute
     scheme no longer has to give up the batched path's volume locality.
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, strip_ref, acc_ref, sems = refs
     z = pl.program_id(0)
     y0 = (pl.program_id(1) * ty).astype(jnp.float32)
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
 
     acc_ref[...] = vol_in_ref[0].astype(jnp.float32)
 
-    def consume(slot, wait_strip, ix, iy, r, r0, c0):
+    def consume(p, slot, wait_strip, ix, iy, r, r0, c0):
         def update(row, col, val):
             cur = acc_ref[row, pl.ds(col, group)]
             acc_ref[row, pl.ds(col, group)] = cur + val
 
         _micro_tile_accumulate(
             wait_strip,
-            lambda r0g, c0g: strip_ref[slot, pl.ds(r0g, gband),
-                                       pl.ds(c0g, gwidth)],
+            lambda r0g, c0g: _dequant_strip(
+                strip_ref[slot, pl.ds(r0g, gband), pl.ds(c0g, gwidth)],
+                scl_ref, r0 + r0g, gband, p),
             update, ix, iy, r, r0=r0, c0=c0, ty=ty, chunk=chunk,
             band=band, width=width, group=group, gband=gband,
             gwidth=gwidth)
@@ -701,10 +755,9 @@ def backproject_kernel_batch_micro(A_ref, imgs_ref, vol_in_ref,
     vol_out_ref[...] = acc_ref[...].astype(vol_out_ref.dtype)[None]
 
 
-def backproject_kernel_batch_shared(A_ref, imgs_ref, vol_in_ref,
-                                    vol_out_ref, win_ref, acc_ref, sem,
-                                    *, o_mm, n_u, n_v, ty, chunk, band,
-                                    width, pbatch):
+def backproject_kernel_batch_shared(A_ref, imgs_ref, *refs,
+                                    o_mm, n_u, n_v, ty, chunk, band,
+                                    width, pbatch, quantized=False):
     """Shared-superset-window batched grid step: ONE window DMA per
     (volume tile, projection group) instead of ``pbatch`` strip fetches.
 
@@ -725,6 +778,10 @@ def backproject_kernel_batch_shared(A_ref, imgs_ref, vol_in_ref,
     Refs as :func:`backproject_kernel_batch`, except the scratch is one
     ``(pbatch, band, width)`` window slab and a single DMA semaphore.
     """
+    scl_ref = None
+    if quantized:
+        scl_ref, *refs = refs
+    vol_in_ref, vol_out_ref, win_ref, acc_ref, sem = refs
     z = pl.program_id(0)
     y0 = (pl.program_id(1) * ty).astype(jnp.float32)
     x0 = (pl.program_id(2) * chunk).astype(jnp.float32)
@@ -755,7 +812,8 @@ def backproject_kernel_batch_shared(A_ref, imgs_ref, vol_in_ref,
         @pl.when(active)
         def _():
             acc_ref[...] += _tile_contrib(
-                lambda: win_ref[p], ix, iy, r, r0s, c0s, ty=ty,
+                lambda: _dequant_strip(win_ref[p], scl_ref, r0s, band, p),
+                ix, iy, r, r0s, c0s, ty=ty,
                 chunk=chunk, band=band, width=width)
         return 0
 
@@ -767,7 +825,8 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
                               ty=8, chunk=128, band=16, width=512,
                               double_buffer=False, db_depth=2,
                               micro=False, micro_group=8, micro_band=8,
-                              micro_width=32, interpret=False):
+                              micro_width=32, scales=None,
+                              interpret=False):
     """``pallas_call`` wrapper: one projection into the whole volume.
 
     ``volume``: (L, L, L) f32; ``padded_img``: zero-padded projection,
@@ -777,6 +836,13 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
     ``db_depth`` slots in rotation, same ledger as the batched variant);
     ``micro=True`` the per-group micro-window compute (CT-5).
 
+    ``scales`` selects the int8 wire: ``padded_img`` holds int8 codes
+    and ``scales`` the ``(2, rows)`` f32 per-row scale/offset block
+    (built by ops.py from :func:`repro.quant.quantize_rows`), kept
+    VMEM-resident for the whole call via a constant-index BlockSpec —
+    it is ~8 bytes per detector row against the strip stream it
+    sidesteps, so it is fetched once, not per window.
+
     (``micro_band`` used to default to 4 — the same silent tap-drop
     hazard class PR 2 fixed for the jnp ``strip2`` ``gband``; 8 covers
     every geometry in the repo's sweeps, and ops.py now validates the
@@ -785,6 +851,7 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
     L = volume.shape[0]
     assert L % ty == 0 and L % chunk == 0
     grid = (L, L // ty, L // chunk)
+    quantized = scales is not None
 
     vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
     if micro and double_buffer:
@@ -795,7 +862,8 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
         kernel = functools.partial(
             backproject_kernel_micro, o_mm=o_mm, n_u=n_u, n_v=n_v,
             ty=ty, chunk=chunk, band=band, width=width,
-            group=micro_group, gband=micro_band, gwidth=micro_width)
+            group=micro_group, gband=micro_band, gwidth=micro_width,
+            quantized=quantized)
         scratch = [pltpu.VMEM((band, width), padded_img.dtype),
                    pltpu.SemaphoreType.DMA]
         name = "backproject_strip_micro"
@@ -808,33 +876,43 @@ def backproject_volume_pallas(volume, padded_img, A, *, o_mm, n_u, n_v,
         kernel = functools.partial(
             backproject_kernel_db, o_mm=o_mm, n_u=n_u, n_v=n_v,
             ty=ty, chunk=chunk, band=band, width=width, grid_dims=grid,
-            depth=depth)
+            depth=depth, quantized=quantized)
         scratch = [pltpu.VMEM((depth, band, width), padded_img.dtype),
                    pltpu.SemaphoreType.DMA((depth,))]
         name = f"backproject_strip_db{depth}"
     else:
         kernel = functools.partial(
             backproject_kernel, o_mm=o_mm, n_u=n_u, n_v=n_v,
-            ty=ty, chunk=chunk, band=band, width=width)
+            ty=ty, chunk=chunk, band=band, width=width,
+            quantized=quantized)
         scratch = [pltpu.VMEM((band, width), padded_img.dtype),
                    pltpu.SemaphoreType.DMA]
         name = "backproject_strip"
 
+    in_specs = [
+        pl.BlockSpec(memory_space=pltpu.SMEM),       # A (3, 4)
+        pl.BlockSpec(memory_space=pltpu.ANY),        # padded image (HBM)
+    ]
+    args = [A, padded_img]
+    if quantized:
+        # Whole scale block resident in VMEM (constant index map).
+        in_specs.append(pl.BlockSpec(scales.shape, lambda z, y, x: (0, 0)))
+        args.append(scales)
+        name += "_int8"
+    in_specs.append(vol_spec)                        # volume tile in
+    args.append(volume)
+
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # A (3, 4)
-            pl.BlockSpec(memory_space=pltpu.ANY),    # padded image (HBM)
-            vol_spec,                                # volume tile in
-        ],
+        in_specs=in_specs,
         out_specs=vol_spec,
         out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
         scratch_shapes=scratch,
-        input_output_aliases={2: 0},
+        input_output_aliases={len(args) - 1: 0},
         interpret=interpret,
         name=name,
-    )(A, padded_img, volume)
+    )(*args)
 
 
 def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
@@ -842,7 +920,7 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
                                     width=512, double_buffer=False,
                                     db_depth=2, micro=False, micro_group=8,
                                     micro_band=8, micro_width=32,
-                                    shared_window=False,
+                                    shared_window=False, scales=None,
                                     interpret=False):
     """``pallas_call`` wrapper: one *batch* of projections into the whole
     volume, volume tile resident across the in-kernel projection loop.
@@ -864,12 +942,16 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
     are the *superset* dims ops.py sized against the group planner).
     The variants are exclusive — asking for two raises rather than
     silently preferring one, because a tuned decision named exactly one.
+
+    ``scales`` selects the int8 wire exactly as in
+    :func:`backproject_volume_pallas`, stacked ``(pbatch, 2, rows)``.
     """
     L = volume.shape[0]
     pbatch = int(A_stack.shape[0])
     assert L % ty == 0 and L % chunk == 0
     assert padded_imgs.shape[0] == pbatch
     grid = (L, L // ty, L // chunk)
+    quantized = scales is not None
 
     vol_spec = pl.BlockSpec((1, ty, chunk), lambda z, y, x: (z, y, x))
     if micro and double_buffer or shared_window and (micro or double_buffer):
@@ -877,18 +959,33 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
             f"batch kernel variants are exclusive: got micro={micro}, "
             f"double_buffer={double_buffer}, shared_window="
             f"{shared_window}; a tuned decision names exactly one")
+
+    def specs_and_args():
+        in_specs = [
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # A stack (P, 3, 4)
+            pl.BlockSpec(memory_space=pltpu.ANY),    # padded images (HBM)
+        ]
+        args = [A_stack, padded_imgs]
+        if quantized:
+            # Whole (P, 2, rows) scale block VMEM-resident per call.
+            in_specs.append(
+                pl.BlockSpec(scales.shape, lambda z, y, x: (0, 0, 0)))
+            args.append(scales)
+        in_specs.append(vol_spec)                    # volume tile in
+        args.append(volume)
+        return in_specs, args
+
     if shared_window:
         kernel = functools.partial(
             backproject_kernel_batch_shared, o_mm=o_mm, n_u=n_u, n_v=n_v,
-            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch)
+            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch,
+            quantized=quantized)
+        in_specs, args = specs_and_args()
+        name = f"backproject_strip_batch_shared_p{pbatch}"
         return pl.pallas_call(
             kernel,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec(memory_space=pltpu.SMEM),
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                vol_spec,
-            ],
+            in_specs=in_specs,
             out_specs=vol_spec,
             out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
             scratch_shapes=[
@@ -896,15 +993,16 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
                 pltpu.VMEM((ty, chunk), jnp.float32),
                 pltpu.SemaphoreType.DMA,
             ],
-            input_output_aliases={2: 0},
+            input_output_aliases={len(args) - 1: 0},
             interpret=interpret,
-            name=f"backproject_strip_batch_shared_p{pbatch}",
-        )(A_stack, padded_imgs, volume)
+            name=name + ("_int8" if quantized else ""),
+        )(*args)
     if micro:
         kernel = functools.partial(
             backproject_kernel_batch_micro, o_mm=o_mm, n_u=n_u, n_v=n_v,
             ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch,
-            group=micro_group, gband=micro_band, gwidth=micro_width)
+            group=micro_group, gband=micro_band, gwidth=micro_width,
+            quantized=quantized)
         n_slots = 2
         name = f"backproject_strip_batch_micro_p{pbatch}"
     elif double_buffer:
@@ -916,22 +1014,20 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
         kernel = functools.partial(
             backproject_kernel_batch_db, o_mm=o_mm, n_u=n_u, n_v=n_v,
             ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch,
-            depth=n_slots, grid_dims=grid)
+            depth=n_slots, grid_dims=grid, quantized=quantized)
         name = f"backproject_strip_batch_db{n_slots}_p{pbatch}"
     else:
         kernel = functools.partial(
             backproject_kernel_batch, o_mm=o_mm, n_u=n_u, n_v=n_v,
-            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch)
+            ty=ty, chunk=chunk, band=band, width=width, pbatch=pbatch,
+            quantized=quantized)
         n_slots = 2
         name = f"backproject_strip_batch_p{pbatch}"
+    in_specs, args = specs_and_args()
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),   # A stack (P, 3, 4)
-            pl.BlockSpec(memory_space=pltpu.ANY),    # padded images (HBM)
-            vol_spec,                                # volume tile in
-        ],
+        in_specs=in_specs,
         out_specs=vol_spec,
         out_shape=jax.ShapeDtypeStruct(volume.shape, volume.dtype),
         scratch_shapes=[
@@ -939,7 +1035,7 @@ def backproject_volume_pallas_batch(volume, padded_imgs, A_stack, *, o_mm,
             pltpu.VMEM((ty, chunk), jnp.float32),
             pltpu.SemaphoreType.DMA((n_slots,)),
         ],
-        input_output_aliases={2: 0},
+        input_output_aliases={len(args) - 1: 0},
         interpret=interpret,
-        name=name,
-    )(A_stack, padded_imgs, volume)
+        name=name + ("_int8" if quantized else ""),
+    )(*args)

@@ -49,19 +49,25 @@ def clamp_tiles(gs: GeomStatic, ty: int, chunk: int, band: int,
     return ty, chunk, band, width
 
 
+# Sublane tile per wire itemsize (f32 8, bf16 16, int8 32): padded row
+# counts are rounded to this so every (band, width) slice is aligned.
+_SUBLANE = {1: 32, 2: 16, 4: 8}
+
+
 def _pad_up(image, band: int, width: int, dtype=None):
     """1-pixel zero border, then round rows/cols up to slice-safe sizes.
 
     Rows are rounded to a multiple of the sublane tile (8 for f32, 16
-    for 2-byte wire dtypes) and cols to a multiple of 128 (lane tile),
-    and at least (band, width), so any clamped ``(band, width)`` dynamic
-    slice stays in-bounds and hardware-aligned.  ``dtype`` casts the
-    image to the strip wire dtype *before* padding (``None`` leaves the
-    dtype — and the f32 bits — untouched).
+    for 2-byte wire dtypes, 32 for 1-byte) and cols to a multiple of
+    128 (lane tile), and at least (band, width), so any clamped
+    ``(band, width)`` dynamic slice stays in-bounds and
+    hardware-aligned.  ``dtype`` casts the image to the strip wire
+    dtype *before* padding (``None`` leaves the dtype — and the f32
+    bits — untouched).
     """
     if dtype is not None:
         image = image.astype(dtype)
-    sub = 16 if image.dtype.itemsize == 2 else 8
+    sub = _SUBLANE.get(image.dtype.itemsize, 8)
     n_v, n_u = image.shape
     rows = max(band, n_v + 2)
     rows += (-rows) % sub
@@ -126,6 +132,50 @@ def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
                 f"undersized micro windows drop taps silently")
 
 
+def _encode_padded(image, band: int, width: int):
+    """Pad (to the int8 sublane tile) then encode once for the int8
+    wire.
+
+    The f32 image is zero-bordered and rounded up to the 1-byte tile
+    shape *first*, then row-encoded (:func:`repro.quant.quantize_rows`
+    — per-row affine grid, residual feedback along the row), so pad
+    rows/cols are all-zero rows that decode to exactly 0.0 and the
+    codes slab is directly DMA-sliceable.  Returns ``(codes, scales)``
+    with ``codes`` int8 ``(rows, cols)`` and ``scales`` f32 ``(2,
+    rows)`` — ``[0] = scale``, ``[1] = offset`` — the layout
+    :func:`repro.kernels.backproject._dequant_strip` reads.
+    """
+    from repro.quant import quantize_rows
+
+    sub = _SUBLANE[1]
+    n_v, n_u = image.shape
+    rows = max(band, n_v + 2)
+    rows += (-rows) % sub
+    cols = max(width, n_u + 2)
+    cols += (-cols) % 128
+    padded = jnp.pad(image.astype(jnp.float32),
+                     ((1, rows - n_v - 1), (1, cols - n_u - 1)))
+    rq = quantize_rows(padded)
+    return rq.codes, jnp.stack([rq.scale, rq.offset])
+
+
+def _encode_padded_stack(images, band: int, width: int):
+    """Stacked :func:`_encode_padded`: ``(P, rows, cols)`` int8 codes
+    plus ``(P, 2, rows)`` per-projection scale blocks."""
+    from repro.quant import quantize_rows
+
+    sub = _SUBLANE[1]
+    n_proj, n_v, n_u = images.shape
+    rows = max(band, n_v + 2)
+    rows += (-rows) % sub
+    cols = max(width, n_u + 2)
+    cols += (-cols) % 128
+    padded = jnp.pad(images.astype(jnp.float32),
+                     ((0, 0), (1, rows - n_v - 1), (1, cols - n_u - 1)))
+    rq = jax.vmap(quantize_rows)(padded)
+    return rq.codes, jnp.stack([rq.scale, rq.offset], axis=1)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("gs", "ty", "chunk", "band", "width",
@@ -135,14 +185,19 @@ def validate_strip_config(geom: Geometry, A: np.ndarray, *, ty: int,
 def _run(volume, image, A, gs: GeomStatic, ty, chunk, band, width,
          double_buffer, db_depth, micro, micro_group, micro_band,
          micro_width, strip_dtype, interpret):
-    padded = _pad_up(image, band, width, strip_wire_dtype(strip_dtype))
+    wire = strip_wire_dtype(strip_dtype)
+    if wire is jnp.int8:
+        padded, scales = _encode_padded(image, band, width)
+    else:
+        padded = _pad_up(image, band, width, wire)
+        scales = None
     return backproject_volume_pallas(
         volume, padded, A,
         o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
         ty=ty, chunk=chunk, band=band, width=width,
         double_buffer=double_buffer, db_depth=db_depth, micro=micro,
         micro_group=micro_group, micro_band=micro_band,
-        micro_width=micro_width, interpret=interpret)
+        micro_width=micro_width, scales=scales, interpret=interpret)
 
 
 def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
@@ -160,8 +215,11 @@ def pallas_backproject_one(volume, image, A, geom: Geometry | GeomStatic,
     ``strip_dtype="bfloat16"`` carries the padded projection (and so
     every strip DMA and the VMEM scratch) in bf16; the kernels already
     upcast the window to f32 at the one-hot matmul and accumulate in
-    f32, so only the tap values are rounded.  The f32 default path is
-    bitwise-unchanged.
+    f32, so only the tap values are rounded.  ``strip_dtype="int8"``
+    encodes the padded projection once (:func:`_encode_padded` — per-row
+    affine codes + error feedback) and moves 1-byte codes on every strip
+    DMA, dequantising in-register next to the accumulator.  The f32
+    default path is bitwise-unchanged.
 
     ``interpret=None`` auto-selects: compiled on TPU, interpreter
     elsewhere.  ``validate=True`` runs the host planner check first
@@ -232,7 +290,7 @@ def _pad_up_stack(images, band: int, width: int, dtype=None):
     casts to the strip wire dtype first, ``None`` = untouched f32)."""
     if dtype is not None:
         images = images.astype(dtype)
-    sub = 16 if images.dtype.itemsize == 2 else 8
+    sub = _SUBLANE.get(images.dtype.itemsize, 8)
     n_proj, n_v, n_u = images.shape
     rows = max(band, n_v + 2)
     rows += (-rows) % sub
@@ -256,17 +314,23 @@ def _run_batched(volume, images, mats, gs: GeomStatic, ty, chunk, band,
 
     # With shared_window the (band, width) passed here are already the
     # superset-window dims sized by the caller.
-    padded = _pad_up_stack(images, band, width,
-                           strip_wire_dtype(strip_dtype))
+    wire = strip_wire_dtype(strip_dtype)
+    if wire is jnp.int8:
+        # Encode once for the whole stack; _stream_batches slices the
+        # (codes, scales) pair per batch as one pytree.
+        padded = _encode_padded_stack(images, band, width)
+    else:
+        padded = _pad_up_stack(images, band, width, wire)
 
     def call(vol, imgs, A):
+        codes, scl = imgs if isinstance(imgs, tuple) else (imgs, None)
         return backproject_volume_pallas_batch(
-            vol, imgs, A, o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
+            vol, codes, A, o_mm=(gs.O, gs.MM), n_u=gs.n_u, n_v=gs.n_v,
             ty=ty, chunk=chunk, band=band, width=width,
             double_buffer=double_buffer, db_depth=db_depth, micro=micro,
             micro_group=micro_group, micro_band=micro_band,
             micro_width=micro_width, shared_window=shared_window,
-            interpret=interpret)
+            scales=scl, interpret=interpret)
 
     return _stream_batches(padded, mats, volume, pbatch, call)
 
@@ -365,7 +429,11 @@ def pallas_backproject_batch(volume, images, mats,
     ``strip_dtype="bfloat16"`` carries the padded stack (all strip/
     window DMAs and the VMEM scratch) in bf16 — the kernels upcast to
     f32 at the one-hot matmul and accumulate in f32, so only the tap
-    values round; the f32 default is bitwise-unchanged.
+    values round; ``strip_dtype="int8"`` encodes the stack once into
+    per-row affine codes plus a ``(pbatch, 2, rows)`` scale block
+    (:func:`_encode_padded_stack`) and every strip/window DMA moves
+    1-byte codes, dequantised in-register; the f32 default is
+    bitwise-unchanged.
     ``shared_window=True`` selects the superset-window kernel: one
     ``(pbatch, band, width)`` window DMA per (volume tile, projection
     group) instead of ``pbatch`` strip fetches.  The window dims are

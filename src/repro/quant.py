@@ -1,0 +1,124 @@
+"""Shared int8 error-feedback quantisation (DESIGN.md §12).
+
+Two consumers move int8 codes instead of f32 values and need the *same*
+quantise-with-residual primitive:
+
+* :func:`repro.dist.collectives.compress_psum` — gradient-style
+  all-reduce compression on a symmetric per-leaf grid, residual carried
+  *across calls* so the running mean converges;
+* the ``strip_dtype="int8"`` wire — the padded detector image encoded
+  once at pad time into int8 codes plus per-detector-row f32
+  scale/zero-point, residual carried *along each row* so quantisation
+  error is redistributed within the row instead of accumulating along
+  it (classic sigma-delta error diffusion).
+
+:func:`quantize_ef` is that primitive, factored out of the idiom
+``compress_psum`` shipped first.  The row-wire layer on top
+(:func:`quantize_rows` / :func:`dequantize_rows`) owns the per-row
+affine grid: ``value = code * scale[row] + offset[row]`` with codes in
+``[-127, 127]``.  The grid always contains 0 exactly representable to
+within half a step (the row range is widened to include 0), and an
+all-zero row — the zero-padded border every strip sampler relies on —
+decodes to *exactly* 0.0: its codes are all ``-127`` and its offset is
+``-(-127) * scale`` by construction, so the two products cancel
+bitwise.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["RowQuant", "quantize_ef", "quantize_rows", "dequantize_rows"]
+
+# Smallest scale a degenerate (constant) range quantises at — keeps the
+# divide finite; chosen so ``127 * _EPS_SCALE`` is still a normal f32.
+_EPS_SCALE = 1e-30
+
+
+def quantize_ef(x, scale, offset=None, *, error=None):
+    """One error-feedback quantisation step onto an int8 grid.
+
+    Quantises ``x`` (plus the carried residual ``error``) to codes in
+    ``[-127, 127]`` on the grid ``code * scale (+ offset)`` and returns
+    ``(codes, new_error)`` where ``new_error = (x + error) -
+    dequant(codes)`` — the residual the caller feeds into the *next*
+    step (the EF trick that turns a biased one-shot compressor into an
+    asymptotically exact stream).  ``offset=None`` selects the
+    symmetric grid (no add on either side — the exact
+    ``compress_psum`` arithmetic); ``error=None`` starts a fresh
+    residual chain.  Codes are returned as f32 (callers cast to int8
+    for the wire; the residual math needs the f32 value anyway).
+    """
+    xp = x if error is None else x + error
+    centred = xp if offset is None else xp - offset
+    q = jnp.clip(jnp.round(centred / scale), -127.0, 127.0)
+    deq = q * scale if offset is None else q * scale + offset
+    return q, xp - deq
+
+
+class RowQuant(NamedTuple):
+    """Per-row affine int8 encoding of a 2-D image (a jax pytree).
+
+    ``value[r, c] = codes[r, c] * scale[r] + offset[r]`` — one f32
+    scale/zero-point pair per detector row, 8 bytes of sideband per row
+    against 1 byte/pixel on the wire.
+    """
+
+    codes: jnp.ndarray          # int8 (rows, cols)
+    scale: jnp.ndarray          # f32 (rows,)
+    offset: jnp.ndarray         # f32 (rows,)
+
+
+def _row_grid(x, symmetric: bool):
+    """Per-row ``(scale, offset)`` of the affine (or symmetric) grid.
+
+    The row range is widened to include 0 — out-of-detector taps must
+    decode to ~0, so 0 has to sit on every row's grid within half a
+    step regardless of the row's own values.
+    """
+    if symmetric:
+        amax = jnp.max(jnp.abs(x), axis=1)
+        scale = jnp.maximum(amax, _EPS_SCALE) / 127.0
+        return scale, jnp.zeros_like(scale)
+    lo = jnp.minimum(jnp.min(x, axis=1), 0.0)
+    hi = jnp.maximum(jnp.max(x, axis=1), 0.0)
+    scale = jnp.maximum(hi - lo, _EPS_SCALE) / 254.0
+    # Code -127 decodes to ``lo`` exactly: offset = lo + 127 * scale.
+    # For an all-zero row lo = hi = 0, so offset = 127 * scale and the
+    # (all -127) codes decode to -127*scale + 127*scale == 0.0 bitwise.
+    return scale, lo + 127.0 * scale
+
+
+def quantize_rows(image, *, symmetric: bool = False) -> RowQuant:
+    """Encode a 2-D f32 image into per-row affine int8 codes.
+
+    The residual feedback runs *along each row* (a ``lax.scan`` over
+    columns whose carry is one residual per row): each column's
+    quantisation error is added to the next column before it quantises,
+    so the error is redistributed within the row — the running sum of
+    per-pixel errors along any row prefix stays bounded by ~one grid
+    step instead of growing with the row length.  Rows are independent;
+    nothing leaks across them.  ``symmetric=True`` forces a zero
+    offset (the ``compress_psum`` grid, per row).
+    """
+    x = jnp.asarray(image, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(
+            f"quantize_rows wants a 2-D image, got shape {x.shape}")
+    scale, offset = _row_grid(x, symmetric)
+
+    def step(err, col):             # err, col: (rows,) — one scan per col
+        q, err = quantize_ef(col, scale, offset, error=err)
+        return err, q
+
+    _, codes_t = jax.lax.scan(step, jnp.zeros_like(scale), x.T)
+    return RowQuant(codes_t.T.astype(jnp.int8), scale, offset)
+
+
+def dequantize_rows(rq: RowQuant):
+    """Decode per-row affine int8 codes back to f32."""
+    return (rq.codes.astype(jnp.float32) * rq.scale[:, None]
+            + rq.offset[:, None])

@@ -45,10 +45,13 @@ DEFAULT_STRATEGY = "strip2"
 # would misattribute its numbers; v4: the ``strip_dtype`` and
 # ``shared_window`` axes — a v3 decision predates the bf16-wire and
 # superset-window variants, so its "best" never competed against them
-# and replaying it would freeze the old design space).  ``load_tuned``
-# treats any other version as untuned, so stale ``.repro_tune/`` files
-# are *ignored*, never misread into the new dataclass.
-TUNE_SCHEMA_VERSION = 4
+# and replaying it would freeze the old design space; v5: the
+# ``strip_dtype="int8"`` axis — a v4 decision's wire-dtype winner never
+# competed against the per-row-affine int8 candidates, and the VMEM
+# screen is now itemsize-aware at 1 byte).  ``load_tuned`` treats any
+# other version as untuned, so stale ``.repro_tune/`` files are
+# *ignored*, never misread into the new dataclass.
+TUNE_SCHEMA_VERSION = 5
 
 # ``micro_*`` ride along with ``micro``: a tuned micro decision was
 # validated (and timed) at a specific ``(micro_band, micro_width)``

@@ -105,11 +105,16 @@ def jnp_candidates(gs: GeomStatic,
         bases.append(Candidate.of(
             "strip2", group=min(group, L), gband=min(gband, gs.n_v + 2),
             gwidth=min(gwidth, gs.n_u + 2)))
-    # The bf16-wire axis on the best strip window: halves strip bytes at
-    # identical tap semantics (f32 accumulate), so it must compete.
+    # The wire-dtype axis on the best strip window: bf16 halves strip
+    # bytes at identical tap semantics (f32 accumulate); int8 halves
+    # them again via per-row affine codes (repro.quant), paying a
+    # one-time encode per projection.  Both must compete.
     bases.append(Candidate.of(
         "strip2", group=min(8, L), gband=min(8, gs.n_v + 2),
         gwidth=min(64, gs.n_u + 2), strip_dtype="bfloat16"))
+    bases.append(Candidate.of(
+        "strip2", group=min(8, L), gband=min(8, gs.n_v + 2),
+        gwidth=min(64, gs.n_u + 2), strip_dtype="int8"))
     cands = [Candidate.of(b.strategy, **dict(b.opts), pbatch=pb)
              for b in bases for pb in pbatches]
     # De-dup clamped collisions on tiny geometries.
@@ -153,13 +158,19 @@ def pallas_candidates(gs: GeomStatic,
                                   db_depth=2, **base))
         cands.append(Candidate.of("pallas", pbatch=pb, **micro_win,
                                   **base))
-        # bf16 wire on the plain batch kernel (halved strip DMA bytes).
+        # Narrow-wire axes on the plain batch kernel: bf16 halves strip
+        # DMA bytes, int8 halves them again (per-row affine codes, 1-byte
+        # scratch — the VMEM screen at itemsize=1 admits it wherever the
+        # f32 config fits).
         cands.append(Candidate.of("pallas", pbatch=pb,
                                   strip_dtype="bfloat16", **base))
+        if pallas_batch_fits_vmem(gs, pbatch=pb, itemsize=1, **base):
+            cands.append(Candidate.of("pallas", pbatch=pb,
+                                      strip_dtype="int8", **base))
         # Shared superset window: one DMA per projection group.  The
         # window dims auto-size from the group planner at run time; the
         # VMEM screen assumes up to 2x the base strip dims per slab
-        # (itemsize 2 for the bf16 variant).
+        # (itemsize 2 for the bf16 variant, 1 for int8).
         if pallas_batch_fits_vmem(gs, pbatch=pb, ty=base["ty"],
                                   chunk=base["chunk"],
                                   band=2 * base["band"],
@@ -169,6 +180,9 @@ def pallas_candidates(gs: GeomStatic,
             cands.append(Candidate.of("pallas", pbatch=pb,
                                       shared_window=True,
                                       strip_dtype="bfloat16", **base))
+            cands.append(Candidate.of("pallas", pbatch=pb,
+                                      shared_window=True,
+                                      strip_dtype="int8", **base))
     if batched:
         pb = max(batched)
         if pallas_batch_fits_vmem(gs, pbatch=pb, depth=4, **base):

@@ -153,8 +153,8 @@ def sweep_strategies(geom: Geometry, *, image=None, A=None,
                         pbatch=pb_eff,
                         shared_band=opts.get("shared_band"),
                         shared_width=opts.get("shared_width"))
-                    itemsize = 2 if opts.get(
-                        "strip_dtype") == "bfloat16" else 4
+                    itemsize = {"bfloat16": 2, "int8": 1}.get(
+                        str(opts.get("strip_dtype")), 4)
                     if not pallas_batch_fits_vmem(
                             gs, pbatch=pb_eff, ty=ty, chunk=chunk,
                             band=sband, width=swidth, depth=pb_eff,

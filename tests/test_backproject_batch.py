@@ -477,10 +477,14 @@ def test_pallas_batch_shared_border_rays():
     assert (np.asarray(ref) == 0.0).any() and (np.asarray(ref) != 0.0).any()
 
 
-def test_pallas_batch_bf16_wire_differs_but_bounded(ct_case):
-    """bf16 on the kernel wire (plain and shared): observably different
-    from f32 (the cast is real) yet within ~0.5% of the volume scale —
-    the f32-accumulate contract, adversarial form."""
+@pytest.mark.parametrize("dtype,rel", [("bfloat16", 0.005),
+                                       ("int8", 0.02)])
+def test_pallas_batch_narrow_wire_differs_but_bounded(ct_case, dtype, rel):
+    """Narrow wires on the batch kernel (plain and shared): observably
+    different from f32 (the conversion is real) yet within a small
+    fraction of the volume scale — the f32-accumulate contract,
+    adversarial form.  bf16 rounds the tap values (~0.5%); int8 moves
+    per-row affine codes dequantised after the gather (~2%)."""
     filt, mats = ct_case
     vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
     f32 = np.asarray(pallas_backproject_batch(
@@ -488,11 +492,27 @@ def test_pallas_batch_bf16_wire_differs_but_bounded(ct_case):
         pbatch=2))
     scale = float(np.abs(f32).max())
     for flags in (dict(), dict(shared_window=True)):
-        b16 = np.asarray(pallas_backproject_batch(
+        vq = np.asarray(pallas_backproject_batch(
             vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
-            pbatch=2, strip_dtype="bfloat16", **flags))
-        assert not np.array_equal(b16, f32)
-        assert float(np.abs(b16 - f32).max()) < 0.005 * scale
+            pbatch=2, strip_dtype=dtype, **flags))
+        assert not np.array_equal(vq, f32)
+        assert float(np.abs(vq - f32).max()) < rel * scale
+
+
+def test_pallas_batch_int8_variants_agree_bitwise(ct_case):
+    """Every batch variant (plain / shared / db / micro) dequantises the
+    same codes with the same per-row scales — the DMA shape must not
+    change the int8 arithmetic, so all four agree bit-for-bit."""
+    filt, mats = ct_case
+    vol0 = jnp.zeros((GEOM.L,) * 3, jnp.float32)
+    outs = []
+    for flags in (dict(), dict(shared_window=True),
+                  dict(double_buffer=True), dict(micro=True)):
+        outs.append(np.asarray(pallas_backproject_batch(
+            vol0, filt, mats, GEOM, ty=4, chunk=16, band=16, width=128,
+            pbatch=2, strip_dtype="int8", **flags)))
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0], other)
 
 
 def test_pallas_batch_shared_is_exclusive(ct_case):

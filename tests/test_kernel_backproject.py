@@ -104,6 +104,33 @@ def test_kernel_dtype_sweep(img_dtype):
         rtol=tol, atol=tol * float(jnp.max(jnp.abs(out_r))))
 
 
+def test_kernel_int8_wire_differs_but_bounded():
+    """int8 per-row affine codes on the kernel wire (plain / db /
+    micro): observably different from f32 (the quantisation is real),
+    within ~2% of the volume scale (the post-gather f32 dequant +
+    f32-accumulate contract), and **bitwise identical across variants**
+    — every variant dequantises the same codes with the same per-row
+    scales, so DMA shape must not change the arithmetic."""
+    geom, filt, mats = _problem(32, n_proj=4)
+    vol0 = jnp.zeros((32,) * 3, jnp.float32)
+    k = 2                      # mid-sweep (projection 0 is Parker~0)
+    base = dict(ty=8, chunk=32, band=16, width=128)
+    f32 = np.asarray(pallas_backproject_one(vol0, filt[k], mats[k],
+                                            geom, **base))
+    scale = float(np.abs(f32).max())
+    outs = []
+    for variant in ({}, {"double_buffer": True}, {"micro": True}):
+        i8 = np.asarray(pallas_backproject_one(
+            vol0, filt[k], mats[k], geom, strip_dtype="int8", **base,
+            **variant))
+        assert not np.array_equal(i8, f32), \
+            f"int8 wire was a no-op under {variant}"
+        assert float(np.abs(i8 - f32).max()) < 0.02 * scale
+        outs.append(i8)
+    for other in outs[1:]:
+        np.testing.assert_array_equal(outs[0], other)
+
+
 def test_kernel_accumulates_over_projections():
     geom, filt, mats = _problem(16, n_proj=3)
     gs = GeomStatic.of(geom)

@@ -1,0 +1,133 @@
+"""repro.quant: the shared int8 error-feedback quantisation primitive.
+
+Covers the contract both consumers rely on (DESIGN.md §12): the
+per-step EF invariant, the bounded row-prefix error the sigma-delta
+carry buys, exact-zero decode for all-zero rows (the padded border),
+grid monotonicity/containment of 0, and the symmetric mode being the
+``compress_psum`` arithmetic.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quant import (RowQuant, dequantize_rows, quantize_ef,
+                         quantize_rows)
+
+
+def _rng(seed=0):
+    return np.random.default_rng(seed)
+
+
+# ----------------------------------------------------------------------
+# quantize_ef: the one-step primitive
+# ----------------------------------------------------------------------
+
+def test_quantize_ef_residual_identity():
+    """new_error == (x + error) - dequant(q), exactly, both grids."""
+    x = jnp.asarray(_rng(1).normal(size=64).astype(np.float32))
+    e = jnp.asarray(_rng(2).normal(size=64).astype(np.float32) * 0.01)
+    scale = jnp.float32(0.05)
+    q, new_e = quantize_ef(x, scale, error=e)
+    np.testing.assert_array_equal(np.asarray(new_e),
+                                  np.asarray((x + e) - q * scale))
+    off = jnp.float32(0.3)
+    q, new_e = quantize_ef(x, scale, off, error=e)
+    np.testing.assert_array_equal(
+        np.asarray(new_e), np.asarray((x + e) - (q * scale + off)))
+
+
+def test_quantize_ef_codes_clipped_and_integral():
+    x = jnp.asarray(np.linspace(-10, 10, 101, dtype=np.float32))
+    q, _ = quantize_ef(x, jnp.float32(0.01))
+    qn = np.asarray(q)
+    assert qn.min() == -127.0 and qn.max() == 127.0
+    np.testing.assert_array_equal(qn, np.round(qn))
+
+
+def test_quantize_ef_symmetric_is_exact_compress_psum_arithmetic():
+    """offset=None inserts no adds on either side — the residual is
+    bit-for-bit ``(x + e) - round(clip)·scale`` with no ``- 0.0`` /
+    ``+ 0.0`` terms in the graph (the compress_psum arithmetic)."""
+    x = jnp.asarray(_rng(8).normal(size=256).astype(np.float32))
+    e = jnp.asarray(_rng(9).normal(size=256).astype(np.float32) * 1e-3)
+    scale = jnp.float32(0.02)
+    q, new_e = quantize_ef(x, scale, error=e)
+    xp = x + e
+    q_ref = jnp.clip(jnp.round(xp / scale), -127.0, 127.0)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_array_equal(np.asarray(new_e),
+                                  np.asarray(xp - q_ref * scale))
+
+
+# ----------------------------------------------------------------------
+# quantize_rows / dequantize_rows: the row wire
+# ----------------------------------------------------------------------
+
+def test_row_roundtrip_error_bounded_by_grid_step():
+    img = _rng(3).normal(size=(24, 96)).astype(np.float32)
+    rq = quantize_rows(img)
+    assert rq.codes.dtype == jnp.int8
+    dec = np.asarray(dequantize_rows(rq))
+    step = np.asarray(rq.scale)[:, None]
+    # EF redistributes error; each pixel still lands within ~1.5 steps
+    # (round-to-nearest half step + the carried residual's half step,
+    # plus clipping slack at the range ends).
+    assert np.all(np.abs(dec - img) <= 1.5 * step + 1e-7)
+
+
+def test_row_prefix_sums_stay_bounded():
+    """The sigma-delta property: the running sum of per-pixel errors
+    along any row prefix is bounded by ~one grid step, instead of
+    growing with the row length — that is what the encode-side carry
+    buys over independent rounding."""
+    img = _rng(4).uniform(0.49, 0.51, size=(8, 4096)).astype(np.float32)
+    rq = quantize_rows(img)
+    dec = np.asarray(dequantize_rows(rq))
+    prefix = np.cumsum(dec - img, axis=1, dtype=np.float64)
+    step = np.asarray(rq.scale)[:, None]
+    assert np.all(np.abs(prefix) <= 1.01 * step + 1e-6)
+
+
+def test_all_zero_rows_decode_exactly_zero():
+    img = np.zeros((16, 256), np.float32)
+    img[3] = _rng(5).normal(size=256).astype(np.float32)
+    dec = np.asarray(dequantize_rows(quantize_rows(img)))
+    zero_rows = [r for r in range(16) if r != 3]
+    assert np.all(dec[zero_rows] == 0.0)
+
+
+def test_zero_always_on_grid_within_half_step():
+    """Rows with strictly positive values still decode ~0 for a 0 input
+    — the grid is widened to contain 0 (out-of-detector taps must not
+    decode to the row minimum)."""
+    img = _rng(6).uniform(5.0, 9.0, size=(4, 128)).astype(np.float32)
+    img[:, 0] = 0.0
+    rq = quantize_rows(img)
+    dec = np.asarray(dequantize_rows(rq))
+    assert np.all(np.abs(dec[:, 0]) <= 0.5 * np.asarray(rq.scale) + 1e-7)
+
+
+def test_symmetric_mode_zero_offset():
+    img = _rng(7).normal(size=(8, 64)).astype(np.float32)
+    rq = quantize_rows(img, symmetric=True)
+    assert np.all(np.asarray(rq.offset) == 0.0)
+    amax = np.abs(img).max(axis=1)
+    np.testing.assert_allclose(np.asarray(rq.scale), amax / 127.0,
+                               rtol=1e-6)
+
+
+def test_quantize_rows_rejects_non_2d():
+    with pytest.raises(ValueError, match="2-D"):
+        quantize_rows(jnp.zeros((2, 3, 4), jnp.float32))
+
+
+def test_rowquant_is_a_pytree():
+    import jax
+
+    rq = quantize_rows(jnp.ones((8, 128), jnp.float32))
+    leaves = jax.tree.leaves(rq)
+    assert len(leaves) == 3
+    sliced = jax.tree.map(lambda a: a[:4], RowQuant(rq.codes[:, :64],
+                                                    rq.scale, rq.offset))
+    assert sliced.codes.shape == (4, 64)

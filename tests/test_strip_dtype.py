@@ -1,19 +1,30 @@
-"""The bf16-wire contract (DESIGN.md §10): ``strip_dtype`` halves the
-bytes the strip strategies move without touching their tap semantics.
+"""The strip-wire contract (DESIGN.md §10, §12): ``strip_dtype`` cuts
+the bytes the strip strategies move without touching their tap
+semantics.
 
 Three guarantees, each load-bearing:
 
 * ``strip_dtype="float32"`` (the default) is **bitwise** the old path —
   not merely close.  The option must be free when unused.
-* ``strip_dtype="bfloat16"`` casts only the *wire* (the padded detector
-  image); accumulation stays f32 via an upcasting dot.  The adversarial
-  bound: the bf16 volume must actually differ from the f32 one (the
-  cast is real, the test cannot silently pass on a no-op) AND stay
-  within a quantified quality envelope — ROI PSNR against the f32
-  volume above 40 dB, phantom-PSNR degradation under 0.5 dB.  Measured
-  headroom is large (ROI PSNR ≈ 73–77 dB, drop ≈ 0.0005 dB); the bound
-  is where "rounding noise" ends and "wrong taps" begins.
-* Unknown dtypes raise loudly — a typo must never run f32 silently.
+* The narrow wires touch only the *wire* (the padded detector image);
+  accumulation stays f32 via an upcasting dot.  The adversarial bound:
+  the narrow-wire volume must actually differ from the f32 one (the
+  conversion is real, the test cannot silently pass on a no-op) AND
+  stay within a quantified quality envelope.  ``"bfloat16"`` (2 B/px):
+  ROI PSNR against the f32 volume above 40 dB, phantom-PSNR drop under
+  0.5 dB.  ``"int8"`` (1 B/px, per-row affine codes with error-feedback
+  encode, dequantised after the gather): ROI PSNR above 35 dB, drop
+  under 1.0 dB.  Measured headroom is large (bf16 ROI PSNR ≈ 73–77 dB,
+  int8 ≈ 57 dB); the bounds are where "rounding noise" ends and
+  "wrong taps" begins.
+* Unknown dtypes raise loudly at every entry layer — a typo must never
+  run f32 silently — and a pre-encoded :class:`repro.quant.RowQuant`
+  handed to a non-int8 sampler raises instead of being misread as
+  codes.
+
+The sharded tests re-check the same three guarantees through
+``sharded_reconstruct`` on a real 2x2 device mesh (subprocess, so the
+main test process keeps jax at 1 device — the test_distributed idiom).
 """
 
 import jax.numpy as jnp
@@ -21,12 +32,18 @@ import numpy as np
 import pytest
 
 from repro.core import Geometry, filter_projections
-from repro.core.backproject import reconstruct, strip_wire_dtype
+from repro.core.backproject import (GeomStatic, reconstruct, sample_strip,
+                                    sample_strip2, strip_wire_dtype)
 from repro.core.phantom import make_dataset
 from repro.core.quality import psnr, roi_mask
+from test_distributed import _run_child
 
 GEOM = Geometry().scaled(16, n_proj=8)
 L = GEOM.L
+
+# (dtype, min ROI PSNR vs f32 volume, max phantom-PSNR drop) — the
+# quality envelope each narrow wire must stay inside.
+WIRES = [("bfloat16", 40.0, 0.5), ("int8", 35.0, 1.0)]
 
 
 @pytest.fixture(scope="module")
@@ -45,21 +62,24 @@ def test_f32_wire_is_bitwise_unchanged(problem, strategy):
     np.testing.assert_array_equal(base, opt)
 
 
+@pytest.mark.parametrize("dtype,psnr_min,drop_max", WIRES)
 @pytest.mark.parametrize("strategy", ["strip", "strip2"])
-def test_bf16_wire_differs_but_bounded(problem, strategy):
+def test_narrow_wire_differs_but_bounded(problem, strategy, dtype,
+                                         psnr_min, drop_max):
     filt, mats, ref = problem
     v32 = np.asarray(reconstruct(filt, mats, GEOM, strategy=strategy))
-    v16 = np.asarray(reconstruct(filt, mats, GEOM, strategy=strategy,
-                                 strip_dtype="bfloat16"))
+    vq = np.asarray(reconstruct(filt, mats, GEOM, strategy=strategy,
+                                strip_dtype=dtype))
     mask = roi_mask(L)
-    # Adversarial half: the cast must be observable...
-    assert not np.array_equal(v16, v32), \
-        "bf16 wire produced a bitwise-identical volume; the cast is dead"
+    # Adversarial half: the conversion must be observable...
+    assert not np.array_equal(vq, v32), \
+        f"{dtype} wire produced a bitwise-identical volume; the " \
+        f"conversion is dead"
     # ...and the tolerance half: observable but small, both relative to
     # the f32 volume and in end-metric (phantom PSNR) terms.
-    assert float(psnr(v16, v32, mask)) > 40.0
-    drop = float(psnr(v32, ref, mask)) - float(psnr(v16, ref, mask))
-    assert abs(drop) < 0.5
+    assert float(psnr(vq, v32, mask)) > psnr_min
+    drop = float(psnr(v32, ref, mask)) - float(psnr(vq, ref, mask))
+    assert abs(drop) < drop_max
 
 
 def test_unknown_strip_dtype_raises(problem):
@@ -74,21 +94,108 @@ def test_unknown_strip_dtype_raises(problem):
 def test_wire_dtype_table():
     assert strip_wire_dtype("float32") is None
     assert strip_wire_dtype("bfloat16") is jnp.bfloat16
+    assert strip_wire_dtype("int8") is jnp.int8
 
 
-def test_engine_fold_accepts_bf16_wire(problem):
+@pytest.mark.parametrize("sampler", [sample_strip, sample_strip2])
+def test_rowquant_image_requires_int8(sampler):
+    """A pre-encoded image on a non-int8 wire must raise, not be
+    silently interpreted as detector values."""
+    from repro.quant import quantize_rows
+
+    rq = quantize_rows(jnp.ones((16, 128), jnp.float32))
+    gs = GeomStatic.of(GEOM)
+    ixy = jnp.zeros((L, L), jnp.float32)
+    for dtype in ("float32", "bfloat16"):
+        with pytest.raises(TypeError, match="RowQuant"):
+            sampler(rq, ixy, ixy, gs, strip_dtype=dtype)
+
+
+@pytest.mark.parametrize("dtype,psnr_min,_drop", WIRES)
+def test_engine_fold_accepts_narrow_wire(problem, dtype, psnr_min, _drop):
     """The streamed fold path threads ``strip_dtype`` end to end."""
     from repro.streaming import ReconstructionEngine
 
     filt, mats, _ = problem
     projs, mats_np, _ = make_dataset(GEOM)
     eng = ReconstructionEngine(GEOM, n_slots=1, pbatch=4,
-                               strategy="strip2",
-                               strip_dtype="bfloat16")
+                               strategy="strip2", strip_dtype=dtype)
     sid = eng.begin_scan(n_proj=GEOM.n_proj)
     eng.submit(sid, np.asarray(projs, np.float32), mats_np,
                np.arange(GEOM.n_proj))
     eng.drain()
-    v16 = np.asarray(eng.result(sid))
+    vq = np.asarray(eng.result(sid))
     v32 = np.asarray(reconstruct(filt, mats, GEOM, strategy="strip2"))
-    assert float(psnr(v16, v32, roi_mask(L))) > 40.0
+    assert float(psnr(vq, v32, roi_mask(L))) > psnr_min
+
+
+def test_engine_rejects_unknown_strip_dtype():
+    from repro.streaming import ReconstructionEngine
+
+    with pytest.raises(ValueError, match="strip_dtype"):
+        ReconstructionEngine(GEOM, n_slots=1, pbatch=4,
+                             strategy="strip2", strip_dtype="int4")
+
+
+# ----------------------------------------------------------------------
+# sharded_reconstruct: the same contract on a real device mesh
+# ----------------------------------------------------------------------
+
+_SHARDED_PREFIX = """
+        from repro.core import Geometry, filter_projections, reconstruct
+        from repro.core.phantom import make_dataset
+        from repro.core.pipeline import sharded_reconstruct
+        from repro.launch.mesh import make_local_mesh
+        geom = Geometry().scaled(16, n_proj=4)
+        projs, mats, ref = make_dataset(geom)
+        filt = np.asarray(filter_projections(projs, geom))
+        mesh = make_local_mesh(data=2, model=2)
+"""
+
+
+def test_sharded_f32_wire_is_bitwise_unchanged():
+    rec = _run_child(4, _SHARDED_PREFIX + """
+        base = sharded_reconstruct(filt, mats, geom, mesh,
+                                   strategy="strip2")
+        opt = sharded_reconstruct(filt, mats, geom, mesh,
+                                  strategy="strip2",
+                                  strip_dtype="float32")
+        print(json.dumps({
+            "bitwise": bool(jnp.array_equal(base, opt)),
+            "sum": float(jnp.sum(base))}))
+    """)
+    assert rec["bitwise"]
+    assert rec["sum"] != 0.0
+
+
+@pytest.mark.parametrize("dtype,psnr_min", [("bfloat16", 40.0),
+                                            ("int8", 35.0)])
+def test_sharded_narrow_wire_differs_but_bounded(dtype, psnr_min):
+    rec = _run_child(4, _SHARDED_PREFIX + f"""
+        from repro.core.quality import psnr, roi_mask
+        v32 = sharded_reconstruct(filt, mats, geom, mesh,
+                                  strategy="strip2")
+        vq = sharded_reconstruct(filt, mats, geom, mesh,
+                                 strategy="strip2",
+                                 strip_dtype={dtype!r})
+        mask = roi_mask(geom.L)
+        print(json.dumps({{
+            "identical": bool(jnp.array_equal(vq, v32)),
+            "psnr": float(psnr(vq, v32, mask))}}))
+    """)
+    assert not rec["identical"], \
+        f"sharded {dtype} wire was a no-op (bitwise-identical volume)"
+    assert rec["psnr"] > psnr_min
+
+
+def test_sharded_unknown_strip_dtype_raises():
+    rec = _run_child(4, _SHARDED_PREFIX + """
+        try:
+            sharded_reconstruct(filt, mats, geom, mesh,
+                                strategy="strip2", strip_dtype="int4")
+        except ValueError as e:
+            print(json.dumps({"raised": "strip_dtype" in str(e)}))
+        else:
+            print(json.dumps({"raised": False}))
+    """)
+    assert rec["raised"]
