@@ -1,0 +1,29 @@
+"""Kernel contract checker: static analysis for the Pallas stack.
+
+Four passes, each proving a contract the runtime checks silently or
+not at all (DESIGN.md §13):
+
+* :mod:`.ledger` — replays every kernel variant's DMA issue/wait logic
+  against recording stubs; proves semaphore balance, producer/consumer
+  origin agreement, slot liveness, and pipeline-depth bounds.
+* :mod:`.budget` — the single VMEM/SMEM byte model behind both the
+  tuner's candidate screen (``pallas_batch_fits_vmem``) and lint.
+* :mod:`.hygiene` — AST rules for the retrace/warn bug classes
+  (jit-in-fn, warn-stacklevel, mutable-default, nonhashable-static).
+* :mod:`.cache_audit` — re-validates persisted ``.repro_tune/``
+  decisions against the current planner; shared with the
+  ``Dispatcher``'s resolve-time audit.
+
+CLI: ``python -m repro.analysis.lint`` emits one JSON document of
+structured findings and exits nonzero when any survive.
+"""
+
+from .budget import (VMEM_BUDGET_BYTES, VmemEstimate,  # noqa: F401
+                     batch_vmem_estimate, estimate_for_pallas_config)
+from .cache_audit import (audit_cache_file,  # noqa: F401
+                          audit_tuned_config, run_cache_audit_pass)
+from .common import Finding, PassResult  # noqa: F401
+from .hygiene import check_source, run_hygiene_pass  # noqa: F401
+from .ledger import (Ledger, ReplayCase, StubRef,  # noqa: F401
+                     builtin_cases, replay, replay_fixture,
+                     run_ledger_pass)

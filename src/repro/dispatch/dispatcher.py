@@ -107,6 +107,7 @@ class Dispatcher:
         self.backend, self.device_kind = device_identity(backend,
                                                          device_kind)
         self._warned: set[tuple[str, str]] = set()
+        self._audited: dict[tuple, bool] = {}
 
     # ------------------------------------------------------------------
     # Public surface
@@ -175,12 +176,49 @@ class Dispatcher:
     def _lookup_or_select(self, gs, full_geom):
         cfg = load_tuned(gs, self.backend, self.device_kind, self.dirpath)
         if cfg is not None:
-            return cfg, "cache"
+            if self._audit_ok(gs, cfg, full_geom):
+                return cfg, "cache"
+            cfg = None                 # stale decision: never replay it
         if full_geom is not None and self._insitu_enabled():
             cfg = self._select(full_geom)
             if cfg is not None:
                 return cfg, "insitu"
         return None, "fallback"
+
+    def _audit_ok(self, gs, cfg, full_geom) -> bool:
+        """Re-validate a cached decision against the current planner
+        before replaying it (the lint cache pass, inline).  A failing
+        config produces ONE structured warning naming key, file, and
+        every reason, and resolution falls through to in-situ selection
+        — a stale-but-schema-valid window must never execute silently.
+        """
+        from repro.analysis.lint.cache_audit import audit_tuned_config
+
+        memo_key = (cache_key(gs, self.backend, self.device_kind),
+                    cfg.strategy, tuple(sorted((cfg.opts or {}).items())),
+                    tuple(sorted((cfg.pallas or {}).items())),
+                    full_geom is not None)
+        hit = self._audited.get(memo_key)
+        if hit is not None:
+            return hit
+        reasons = audit_tuned_config(gs, cfg, geom=full_geom)
+        self._audited[memo_key] = not reasons
+        if not reasons:
+            return True
+        key = cache_key(gs, self.backend, self.device_kind)
+        if ("audit", key) not in self._warned:
+            self._warned.add(("audit", key))
+            from pathlib import Path
+
+            d = Path(self.dirpath) if self.dirpath is not None \
+                else tune_dir()
+            logger.warning(
+                "dispatch: cached decision for key=%s (file %s) fails "
+                "the current planner and will not be replayed: %s — "
+                "falling back to in-situ selection; delete the file or "
+                "re-run repro.tune.autotune to refresh it",
+                key, d / f"{key}.json", "; ".join(reasons))
+        return False
 
     def _select(self, geom: Geometry) -> TunedConfig | None:
         """First-call selection: time the shortlist once, persist."""

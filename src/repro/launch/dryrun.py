@@ -217,6 +217,7 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, *, moe_impl="scatter",
             lambda leaf, ax: _sharding(mesh, rules, leaf, ax),
             opt_sds, ospecs,
             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # One-shot lowering probe, not a hot path.  # lint: ok(jit-in-fn)
         jitted = jax.jit(step, in_shardings=(ps, os_, bs),
                          out_shardings=(ps, os_, None),
                          donate_argnums=(0, 1))
@@ -228,6 +229,7 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, *, moe_impl="scatter",
             return prefill(params, cfg, batch, max_len=shape.seq_len,
                            moe_impl=moe_impl)
 
+        # One-shot lowering probe, not a hot path.  # lint: ok(jit-in-fn)
         jitted = jax.jit(pre, in_shardings=(ps, bs))
         with sharding_context(mesh, rules):
             lowered = jitted.lower(params_sds, batch)
@@ -243,6 +245,7 @@ def lower_cell(cfg, shape: ShapeConfig, mesh, *, moe_impl="scatter",
             return decode_step(params, cfg, cache, tokens, index,
                                moe_impl=moe_impl)
 
+        # One-shot lowering probe, not a hot path.  # lint: ok(jit-in-fn)
         jitted = jax.jit(
             serve_step,
             in_shardings=(ps, cs, bs["tokens"], None),

@@ -72,6 +72,7 @@ def main():
     specs = param_specs(cfg)
 
     with sharding_context(mesh, rules):
+        # Built once per launch, reused every step.  # lint: ok(jit-in-fn)
         step_fn = jax.jit(make_train_step(
             cfg, opt_cfg, moe_impl=args.moe_impl, remat=True,
             accum_steps=args.accum_steps))

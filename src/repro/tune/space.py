@@ -19,15 +19,17 @@ from __future__ import annotations
 
 from typing import NamedTuple
 
+from repro.analysis.lint.budget import (VMEM_BUDGET_BYTES,
+                                        batch_vmem_estimate)
 from repro.core.backproject import GeomStatic
 
 __all__ = ["Candidate", "jnp_candidates", "pallas_candidates",
            "default_space", "pallas_batch_fits_vmem"]
 
-# Usable per-core VMEM budget for candidate screening.  Half the 16 MB
-# physical VMEM: the grid pipeline needs headroom for the in-flight
-# volume tiles and the compiler's own temporaries.
-_VMEM_BUDGET_BYTES = 8 * 2 ** 20
+# Kept as an alias for external readers; the value (and the whole byte
+# model) lives in repro.analysis.lint.budget so the tuner's candidate
+# screen and the lint budget pass can never drift.
+_VMEM_BUDGET_BYTES = VMEM_BUDGET_BYTES
 
 # pbatch depths proposed per candidate family (clamped to n_proj at
 # sweep/run time; 1 = the classical per-projection nest).
@@ -43,15 +45,18 @@ def pallas_batch_fits_vmem(gs: GeomStatic, *, pbatch: int, ty: int,
     the DMA pipeline's ``depth``-slot rotation, whichever is larger
     (the plain batch kernel holds 2 slots, the pipelined variant
     ``db_depth``, and an ANY-space promotion may keep more resident),
-    the aliased volume tile pair plus the f32 accumulator, and the
-    one-hot selector temporaries ``rowsel (ty·chunk, band)`` / ``colsel
-    (ty·chunk, width)``.  A candidate that fails here is never proposed
-    — an OOM'd sweep point would abort the whole tune run on device.
+    the aliased volume tile pair plus the f32 accumulator, the one-hot
+    selector temporaries ``rowsel (ty·chunk, band)`` / ``colsel
+    (ty·chunk, width)``, and — for the 1-byte wire — the ``(P, 2,
+    rows)`` f32 scale sideband.  A candidate that fails here is never
+    proposed — an OOM'd sweep point would abort the whole tune run on
+    device.  Delegates to :func:`repro.analysis.lint.budget
+    .batch_vmem_estimate`: the lint budget pass and this screen are one
+    implementation.
     """
-    strips = max(pbatch, depth) * band * width * itemsize
-    tile = 3 * ty * chunk * 4
-    onehot = ty * chunk * (band + width) * 4
-    return strips + tile + onehot <= _VMEM_BUDGET_BYTES
+    return batch_vmem_estimate(gs, pbatch=pbatch, ty=ty, chunk=chunk,
+                               band=band, width=width, depth=depth,
+                               itemsize=itemsize).fits
 
 
 class Candidate(NamedTuple):

@@ -10,6 +10,41 @@ def rng():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture
+def retrace_counter():
+    """Runtime half of the trace-hygiene pass (DESIGN.md §13): count
+    XLA compilations of jitted entry points via their ``_cache_size()``.
+
+    Usage::
+
+        counter = retrace_counter(core._reconstruct_jit)
+        reconstruct(...)           # first call with a new plan
+        assert counter.delta() == 1
+        reconstruct(...)           # same plan again
+        assert counter.delta() == 1    # still: no silent retrace
+
+    A delta above the number of distinct (shape, static-arg) plans
+    means something non-hashable or freshly-constructed leaked into a
+    jit boundary — the bug class the static ``jit-in-fn`` /
+    ``nonhashable-static`` rules guard at source level.
+    """
+
+    class _Counter:
+        def __init__(self, *fns):
+            assert fns, "pass at least one jitted function"
+            for f in fns:
+                assert hasattr(f, "_cache_size"), (
+                    f"{f} is not a jitted function with _cache_size()")
+            self.fns = fns
+            self.base = [f._cache_size() for f in fns]
+
+        def delta(self) -> int:
+            return sum(f._cache_size() - b
+                       for f, b in zip(self.fns, self.base))
+
+    return _Counter
+
+
 @pytest.fixture(autouse=True)
 def _dispatch_deterministic(monkeypatch):
     """Keep the suite deterministic: an untuned ``strategy="auto"``

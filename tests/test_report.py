@@ -1,0 +1,103 @@
+"""Coverage for repro.analysis.report: dryrun-record loading, the
+duration formatter, and the rendered roofline/summary tables."""
+
+import json
+
+from repro.analysis.report import _fmt_s, load, main, roofline_table, summary
+
+
+def _rec(arch="a100", shape="1b", mesh="pod", status="ok", **over):
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh, "status": status,
+        "step": "train",
+        "roofline": {"compute_s": 2e-3, "memory_s": 4e-3,
+                     "collective_s": 5e-4, "dominant": "memory",
+                     "bound_s": 4e-3},
+        "useful_flops_ratio": 0.62,
+        "memory": {"live_bytes": 12.8e9},
+        "fits_16gb_hbm": True,
+    }
+    rec.update(over)
+    return rec
+
+
+# ----------------------------------------------------------------------
+# load
+# ----------------------------------------------------------------------
+
+def test_load_reads_json_files_sorted(tmp_path):
+    (tmp_path / "b.json").write_text(json.dumps(_rec(shape="8b")))
+    (tmp_path / "a.json").write_text(json.dumps(_rec(shape="1b")))
+    (tmp_path / "notes.txt").write_text("ignored")
+    recs = load(str(tmp_path))
+    assert [r["shape"] for r in recs] == ["1b", "8b"]
+
+
+def test_load_empty_dir(tmp_path):
+    assert load(str(tmp_path)) == []
+
+
+# ----------------------------------------------------------------------
+# _fmt_s
+# ----------------------------------------------------------------------
+
+def test_fmt_s_units():
+    assert _fmt_s(0) == "0"
+    assert _fmt_s(1.5) == "1.50s"
+    assert _fmt_s(2.5e-3) == "2.50ms"
+    assert _fmt_s(42e-6) == "42.00us"
+    assert _fmt_s(7e-9) == "7.00ns"
+    assert _fmt_s(3e-10) == "3.0e-10s"   # below ns: raw scientific
+
+
+# ----------------------------------------------------------------------
+# roofline_table / summary (golden)
+# ----------------------------------------------------------------------
+
+def test_roofline_table_golden():
+    recs = [
+        _rec(arch="h100", shape="8b", status="skipped"),
+        _rec(),
+        _rec(arch="h100", shape="1b", status="error",
+             error="OOM during layout"),
+        _rec(mesh="multipod"),            # filtered out by mesh
+    ]
+    table = roofline_table(recs, "pod")
+    lines = table.splitlines()
+    assert lines[0].startswith("| arch | shape | step |")
+    # Sorted by (arch, shape); the multipod record is absent.
+    assert len(lines) == 2 + 3
+    assert lines[2] == ("| a100 | 1b | train | 2.00ms | 4.00ms | "
+                        "500.00us | memory | 50.0% | 0.62 | 12.8 | "
+                        "yes |")
+    assert "ERROR" in lines[3] and lines[3].startswith("| h100 | 1b |")
+    assert "skip" in lines[4] and lines[4].startswith("| h100 | 8b |")
+
+
+def test_roofline_table_zero_bound_and_tight_memory():
+    r = _rec(fits_16gb_hbm=False)
+    r["roofline"]["bound_s"] = 0.0
+    table = roofline_table([r], "pod")
+    assert "| 0.0% |" in table          # bound_s=0 -> MFU reported 0
+    assert "| NO |" in table            # over-budget HBM is shouted
+
+
+def test_summary_counts_and_error_lines():
+    recs = [_rec(), _rec(status="skipped"),
+            _rec(status="error", error="x" * 200)]
+    text = summary(recs)
+    assert text.splitlines()[0] == "cells: 1 ok, 1 skipped, 1 error"
+    err_line = text.splitlines()[1]
+    assert err_line.startswith("  ERROR a100 1b pod:")
+    assert len(err_line) <= len("  ERROR a100 1b pod: ") + 120
+
+
+def test_main_renders_per_mesh_sections(tmp_path, capsys, monkeypatch):
+    (tmp_path / "p.json").write_text(json.dumps(_rec()))
+    (tmp_path / "m.json").write_text(json.dumps(_rec(mesh="multipod")))
+    monkeypatch.setattr("sys.argv", ["report", str(tmp_path)])
+    main()
+    out = capsys.readouterr().out
+    assert "cells: 2 ok, 0 skipped, 0 error" in out
+    assert "### Roofline — mesh `pod` (256 chips)" in out
+    assert "### Roofline — mesh `multipod` (512 chips)" in out
