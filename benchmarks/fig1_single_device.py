@@ -24,9 +24,9 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.backproject import STRATEGIES, backproject_one, reconstruct
+from repro.api import autotune, reconstruct
+from repro.core.backproject import STRATEGIES, backproject_one
 from repro.kernels.backproject_ops import pallas_backproject_batch
-from repro.tune import autotune
 
 from .common import (STRATEGY_OPTS, bench_size, ct_problem, emit,
                      record_extra, time_fn)

@@ -23,9 +23,8 @@ _CHILD = textwrap.dedent("""
         "--xla_force_host_platform_device_count=%(ndev)d")
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import Geometry, filter_projections
+    from repro.api import Geometry, filter_projections, sharded_reconstruct
     from repro.core.phantom import make_dataset
-    from repro.core.pipeline import sharded_reconstruct
     from repro.launch.mesh import make_local_mesh
 
     L, n_proj = %(L)d, %(n_proj)d

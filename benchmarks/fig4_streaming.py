@@ -23,9 +23,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import Geometry
+from repro.api import Geometry, ProjectionChunk, ReconstructionEngine
 from repro.core.phantom import make_dataset
-from repro.streaming import ReconstructionEngine
 
 from .common import bench_size, emit, record_extra, time_fn
 
@@ -45,7 +44,7 @@ def _stream(geom, projs, mats, *, n_scans: int, chunk: int,
         sel = slice(c0, min(c0 + chunk, n_proj))
         idx = np.arange(sel.start, sel.stop)
         for sid in sids:
-            eng.submit(sid, projs[sel], mats[sel], idx)
+            eng.submit(sid, ProjectionChunk(projs[sel], mats[sel], idx))
     eng.drain()
     vols = [eng.result(sid) for sid in sids]
     vols[-1].block_until_ready()

@@ -14,6 +14,8 @@ fig2_scaling                Fig. 2 (full-system scaling)
 fig3_codegen                Fig. 3 (compiler vs hand-structured)
 fig4_streaming              beyond-paper: streamed-engine time-to-first-
                             volume + projections/s at B concurrent scans
+fig5_serving                beyond-paper: serving-tier TTFV + p50/p99
+                            completion latency vs Poisson offered load
 dispatch                    beyond-paper: auto-dispatch resolution cost
                             (cold in-situ selection vs warm cache hit)
 cycle_model                 Section 6.4 (per-iteration cycle breakdown)
@@ -43,9 +45,9 @@ import jax
 
 from . import common
 from . import (ct_hillclimb, cycle_model, dispatch, fig1_single_device,
-               fig2_scaling, fig3_codegen, fig4_streaming, lm_gather,
-               moe_dispatch, quality, table2_op_census, table3_efficiency,
-               table4_gather_micro, table5_traffic)
+               fig2_scaling, fig3_codegen, fig4_streaming, fig5_serving,
+               lm_gather, moe_dispatch, quality, table2_op_census,
+               table3_efficiency, table4_gather_micro, table5_traffic)
 
 MODULES = [
     ("table2_op_census", table2_op_census),
@@ -56,6 +58,7 @@ MODULES = [
     ("fig2_scaling", fig2_scaling),
     ("fig3_codegen", fig3_codegen),
     ("fig4_streaming", fig4_streaming),
+    ("fig5_serving", fig5_serving),
     ("dispatch", dispatch),
     ("cycle_model", cycle_model),
     ("quality", quality),

@@ -16,8 +16,8 @@ import time
 
 import numpy as np
 
-from repro.core import (Geometry, filter_projections, quality_report,
-                        reconstruct)
+from repro.api import Geometry, filter_projections, reconstruct
+from repro.core import quality_report
 from repro.core.clipping import line_clip_exact
 from repro.core.phantom import make_dataset
 

@@ -16,9 +16,9 @@ import time
 
 import numpy as np
 
-from repro.core import Geometry, quality_report
+from repro.api import Geometry, ProjectionChunk, ReconstructionEngine
+from repro.core import quality_report
 from repro.core.phantom import make_dataset
-from repro.streaming import ReconstructionEngine
 
 
 def main():
@@ -58,7 +58,8 @@ def main():
         for sid in sids:
             if started[sid] is None:
                 started[sid] = time.time()
-            eng.submit(sid, projs[chunk], mats[chunk], chunk)
+            eng.submit(sid, ProjectionChunk(projs[chunk], mats[chunk],
+                                            chunk))
             if eng.scans[sid].done and sid not in finished:
                 finished[sid] = time.time()
     eng.drain()

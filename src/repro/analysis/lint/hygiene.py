@@ -24,6 +24,13 @@ flagged line):
   default is a mutable literal: the first defaulted call raises
   ``unhashable type`` — at runtime, on the path that happens to
   default.
+* ``unused-import`` — an import binding never referenced in the
+  module.  Deliberate re-exports are NOT findings: names listed in the
+  module's ``__all__`` (the ``repro/api.py`` facade idiom), redundant
+  aliases (``from m import x as x``), lines carrying a ``# noqa``
+  marker, and ``from __future__`` imports are all recognised as
+  intentional.  Side-effect imports without any of those markers are
+  what this rule exists to make explicit.
 
 The static walk is paired with a runtime retrace counter: the
 ``retrace_counter`` fixture in ``tests/conftest.py`` reads
@@ -41,7 +48,7 @@ from .common import Finding, PassResult
 __all__ = ["RULES", "check_source", "run_hygiene_pass"]
 
 RULES = ("jit-in-fn", "warn-stacklevel", "mutable-default",
-         "nonhashable-static")
+         "nonhashable-static", "unused-import")
 
 _PRAGMA = "# lint: ok("
 
@@ -210,6 +217,74 @@ class _Walker(ast.NodeVisitor):
         self.generic_visit(node)
 
 
+def _dunder_all(tree) -> set[str]:
+    """String literals assigned (or ``+=``-extended) into ``__all__``."""
+    exported = set()
+    for node in ast.walk(tree):
+        value = None
+        if isinstance(node, ast.Assign) \
+                and any(isinstance(t, ast.Name) and t.id == "__all__"
+                        for t in node.targets):
+            value = node.value
+        elif isinstance(node, ast.AugAssign) \
+                and isinstance(node.target, ast.Name) \
+                and node.target.id == "__all__":
+            value = node.value
+        if isinstance(value, (ast.List, ast.Tuple, ast.Set)):
+            for elt in value.elts:
+                if isinstance(elt, ast.Constant) \
+                        and isinstance(elt.value, str):
+                    exported.add(elt.value)
+    return exported
+
+
+def _check_unused_imports(where: str, tree, lines) -> list:
+    """The ``unused-import`` rule: import bindings nothing references.
+
+    A binding counts as *deliberately* kept when the module exports it
+    through ``__all__`` (the facade re-export idiom), when it uses the
+    redundant-alias form (``from m import x as x`` / ``import m as m``),
+    or when the import line carries a ``# noqa`` marker (the
+    pre-existing convention for side-effect imports).
+    """
+    exported = _dunder_all(tree)
+    used = {n.id for n in ast.walk(tree) if isinstance(n, ast.Name)}
+    findings = []
+
+    def flag(bound: str, lineno: int, what: str):
+        if bound in used or bound in exported:
+            return
+        line = lines[lineno - 1] if 1 <= lineno <= len(lines) else ""
+        if "# noqa" in line:
+            return
+        if _suppressed(lines, lineno, "unused-import"):
+            return
+        findings.append(Finding(
+            "hygiene", "unused-import", f"{where}:{lineno}",
+            f"{what} is never used; re-export it via __all__, mark the "
+            f"line # noqa, or drop it"))
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.asname is not None and alias.asname == alias.name:
+                    continue            # import m as m — explicit re-export
+                bound = alias.asname or alias.name.split(".")[0]
+                flag(bound, node.lineno, f"import {alias.name!r}")
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                if alias.asname is not None and alias.asname == alias.name:
+                    continue            # from m import x as x — re-export
+                bound = alias.asname or alias.name
+                flag(bound, node.lineno,
+                     f"imported name {bound!r}")
+    return findings
+
+
 def check_source(where: str, text: str) -> list:
     """Run all hygiene rules over one source blob."""
     try:
@@ -219,6 +294,8 @@ def check_source(where: str, text: str) -> list:
                         str(e))]
     walker = _Walker(where, text.splitlines())
     walker.visit(tree)
+    walker.findings += _check_unused_imports(where, tree,
+                                             text.splitlines())
     # Module-level statics: x = jit(f, static_argnames=...) naming a
     # module function whose static default is mutable.
     fns = {n.name: n for n in ast.walk(tree)

@@ -1,0 +1,80 @@
+"""The stable public surface of :mod:`repro`.
+
+Nine PRs in, every caller was reaching into deep module paths
+(``repro.core.backproject.reconstruct``, ``repro.dispatch.dispatcher...``)
+— workable inside the repo, hostile to anyone building on it.  This
+facade is the blessed import point: everything in ``__all__`` is covered
+by the compatibility expectations of DESIGN.md §14, and option-bag
+parameters on these entry points are keyword-only (a positional
+``strategy`` stopped being accepted when this module appeared).
+
+One-shot / sharded reconstruction::
+
+    from repro.api import Geometry, filter_projections, reconstruct
+
+    volume = reconstruct(filtered, matrices, geom, strategy="auto")
+
+Streaming / serving::
+
+    from repro.api import CTFrontDoor, ProjectionChunk
+
+    fd = CTFrontDoor(geom, n_slots=4, policy="srsf")
+    ticket = await fd.open_scan(tenant="clinic-a")
+    await fd.submit(ticket, ProjectionChunk(projs, mats, angles))
+    volume = await fd.result(ticket)
+
+Anything *not* re-exported here (kernel internals, the tuner's sweep
+machinery, the analysis passes) is implementation surface that may move
+between releases; import it from its defining module and expect churn.
+"""
+
+from __future__ import annotations
+
+from repro.core.backproject import reconstruct
+from repro.core.filtering import filter_projections
+from repro.core.geometry import Geometry
+from repro.core.pipeline import reconstruct_shards, sharded_reconstruct
+from repro.dispatch import (Dispatcher, ExecutionPlan, get_dispatcher,
+                            set_dispatcher)
+from repro.serving.ct_frontdoor import (AdmissionPolicy, Backpressure,
+                                        CTFrontDoor, DeadlinePolicy,
+                                        FairSharePolicy, FIFOPolicy,
+                                        POLICIES, PolicyContext,
+                                        ScanAborted, ScanTicket,
+                                        SRSFPolicy)
+from repro.streaming import (ProjectionChunk, ReconstructionEngine,
+                             ScanState)
+from repro.tune import TunedConfig, autotune
+
+__all__ = [
+    # one-shot + sharded reconstruction
+    "Geometry",
+    "filter_projections",
+    "reconstruct",
+    "sharded_reconstruct",
+    "reconstruct_shards",
+    # dispatch
+    "Dispatcher",
+    "ExecutionPlan",
+    "get_dispatcher",
+    "set_dispatcher",
+    # tuning
+    "TunedConfig",
+    "autotune",
+    # streaming engine
+    "ProjectionChunk",
+    "ReconstructionEngine",
+    "ScanState",
+    # serving tier
+    "CTFrontDoor",
+    "ScanTicket",
+    "Backpressure",
+    "ScanAborted",
+    "AdmissionPolicy",
+    "FIFOPolicy",
+    "SRSFPolicy",
+    "DeadlinePolicy",
+    "FairSharePolicy",
+    "PolicyContext",
+    "POLICIES",
+]

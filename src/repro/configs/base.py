@@ -10,7 +10,6 @@ family and block pattern, tiny dimensions.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
 
 __all__ = ["ModelConfig", "ShapeConfig", "SHAPES"]
 

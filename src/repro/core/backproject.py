@@ -792,7 +792,7 @@ def _reconstruct_jit(projections, matrices, volume, gs, plan):
                                 jnp.int32(0))
 
 
-def reconstruct(projections, matrices, geom: Geometry,
+def reconstruct(projections, matrices, geom: Geometry, *,
                 strategy: str = "strip2", volume=None,
                 pbatch: int | None = None, plan=None, **opts):
     """Full reconstruction: stream every projection into the volume.

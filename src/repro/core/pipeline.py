@@ -44,7 +44,7 @@ __all__ = ["sharded_reconstruct", "reconstruct_shards"]
 
 
 def reconstruct_shards(local_projs, local_mats, gs: GeomStatic, plan,
-                       local_volume, z0=None):
+                       local_volume, *, z0=None):
     """Per-rank body: back-project the local projection subset.
 
     ``plan`` is the resolved :class:`repro.dispatch.ExecutionPlan`
@@ -63,7 +63,7 @@ def reconstruct_shards(local_projs, local_mats, gs: GeomStatic, plan,
 
 
 def sharded_reconstruct(projections, matrices, geom: Geometry, mesh: Mesh,
-                        strategy: str = "strip2",
+                        *, strategy: str = "strip2",
                         volume_axis: str = "data",
                         proj_axes: tuple[str, ...] = ("model",),
                         pbatch: int | None = None,

@@ -39,7 +39,7 @@ import traceback
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.analysis.hlo import roofline_terms
 from repro.analysis.hlo_module import analyze_module

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
-from repro.configs import ARCHS, SHAPES
+from repro.configs import ARCHS
 from repro.data.tokens import TokenDataset
 from repro.dist.sharding import (ShardingRules, logical_to_spec,
                                  sharding_context, valid_spec)
@@ -27,7 +27,6 @@ from repro.ft.manager import FaultTolerantLoop, run_with_restarts
 from repro.launch.mesh import make_local_mesh, make_production_mesh
 from repro.models.model import init_model, param_specs
 from repro.training import AdamWConfig, init_opt_state, make_train_step
-from repro.training.optim import opt_state_specs
 
 
 def tree_shardings(tree, spec_tree, mesh, rules):

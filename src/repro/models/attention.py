@@ -215,7 +215,6 @@ def _decode_attend_sp(cfg, qg, k_new, v_new, cache, index, dtype):
     mesh/SP context is active.
     """
     from repro.dist.sharding import _CTX, logical_to_spec, valid_spec
-    from jax.sharding import PartitionSpec as P
 
     ctx = _CTX.get()
     if ctx is None:

@@ -1,3 +1,14 @@
-"""Serving: batched prefill/decode engine with slot scheduling."""
+"""Serving: batched prefill/decode LM engine + the CT front door."""
 
+from .ct_frontdoor import (AdmissionPolicy, Backpressure,  # noqa: F401
+                           CTFrontDoor, DeadlinePolicy, FairSharePolicy,
+                           FIFOPolicy, POLICIES, PolicyContext,
+                           ScanAborted, ScanTicket, SRSFPolicy)
 from .engine import Request, ServingEngine  # noqa: F401
+
+__all__ = [
+    "AdmissionPolicy", "Backpressure", "CTFrontDoor", "DeadlinePolicy",
+    "FairSharePolicy", "FIFOPolicy", "POLICIES", "PolicyContext",
+    "ScanAborted", "ScanTicket", "SRSFPolicy",
+    "Request", "ServingEngine",
+]

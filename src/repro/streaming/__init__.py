@@ -1,6 +1,7 @@
 """Streamed reconstruction: serve CT scans the way the LM engine serves
 prompts (DESIGN.md §8)."""
 
-from .engine import ReconstructionEngine, ScanState  # noqa: F401
+from .engine import (ProjectionChunk, ReconstructionEngine,  # noqa: F401
+                     ScanState)
 
-__all__ = ["ReconstructionEngine", "ScanState"]
+__all__ = ["ProjectionChunk", "ReconstructionEngine", "ScanState"]

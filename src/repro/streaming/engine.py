@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +42,7 @@ from repro.core.backproject import (GeomStatic, _backproject_batch_body,
 from repro.core.filtering import FilterPlan, apply_filter, make_filter_plan
 from repro.core.geometry import Geometry
 
-__all__ = ["ScanState", "ReconstructionEngine"]
+__all__ = ["ProjectionChunk", "ScanState", "ReconstructionEngine"]
 
 
 @functools.partial(jax.jit,
@@ -79,6 +80,45 @@ def _fold_slots(volumes, images, mats, mask, gs, plan):
 
     new = jax.vmap(one)(volumes, images, mats)
     return jnp.where(mask[:, None, None, None], new, volumes)
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionChunk:
+    """One typed arrival payload: ``k`` raw projections with their
+    matrices and global angle indices.
+
+    The one submit currency shared by :meth:`ReconstructionEngine.submit`
+    and the front door (:class:`repro.serving.ct_frontdoor.CTFrontDoor`).
+    ``projections`` is ``(k, n_v, n_u)`` (or a single ``(n_v, n_u)``
+    image), ``matrices`` ``(k, 3, 4)`` (or one ``(3, 4)``), and
+    ``angle_indices`` the ``k`` *global* angle indices (or a scalar) —
+    raw line integrals, filtered by the consumer on arrival.
+    """
+
+    projections: object
+    matrices: object
+    angle_indices: object
+
+    @property
+    def n(self) -> int:
+        """Number of projections carried."""
+        shape = np.shape(self.projections)
+        return 1 if len(shape) == 2 else int(shape[0])
+
+    def arrays(self):
+        """Normalise to ``(k, n_v, n_u) f32, (k, 3, 4) f64, (k,) i32``."""
+        projs = jnp.asarray(self.projections, jnp.float32)
+        if projs.ndim == 2:
+            projs = projs[None]
+        mats = np.asarray(self.matrices, np.float64).reshape(-1, 3, 4)
+        idx = np.atleast_1d(np.asarray(self.angle_indices, np.int32))
+        return projs, mats, idx
+
+
+# The deprecated positional ``submit(sid, projection, matrix, angle_index)``
+# form warns exactly once per process — every further call is silent, so a
+# chunk-per-chunk streaming loop does not drown the log.
+_POSITIONAL_SUBMIT_WARNED = False
 
 
 @dataclasses.dataclass
@@ -160,7 +200,7 @@ class ReconstructionEngine:
         self.queue: list[int] = []
         self.slot_history: list[tuple[int, int]] = []  # (slot, sid)
         self.stats = {"folds": 0, "fold_ticks": 0, "retired": 0,
-                      "pallas_folds": 0}
+                      "pallas_folds": 0, "aborted": 0}
         self._next_sid = 0
 
     # ------------------------------------------------------------------
@@ -204,22 +244,41 @@ class ReconstructionEngine:
     # ------------------------------------------------------------------
     # Arrival path
     # ------------------------------------------------------------------
-    def submit(self, sid: int, projection, matrix, angle_index):
-        """Stage one projection (or chunk) of scan ``sid``.
+    def submit(self, sid: int, chunk, matrix=None, angle_index=None):
+        """Stage one :class:`ProjectionChunk` of scan ``sid``.
 
         Filters on device now — with the Parker rows of the *submitted
         angle indices* — and stages the result for the next fold tick.
         Arrival order is free: chunks may be shuffled, interleaved
         across scans, and split arbitrarily.
+
+        The blessed form is ``submit(sid, ProjectionChunk(...))``.  The
+        pre-facade positional form ``submit(sid, projection, matrix,
+        angle_index)`` still works as a thin shim but emits one
+        ``DeprecationWarning`` per process.
         """
+        global _POSITIONAL_SUBMIT_WARNED
+        if not isinstance(chunk, ProjectionChunk):
+            if matrix is None or angle_index is None:
+                raise TypeError(
+                    "submit takes a ProjectionChunk (or the deprecated "
+                    "positional (projection, matrix, angle_index) triple)")
+            if not _POSITIONAL_SUBMIT_WARNED:
+                _POSITIONAL_SUBMIT_WARNED = True
+                warnings.warn(
+                    "submit(sid, projection, matrix, angle_index) is "
+                    "deprecated; pass submit(sid, ProjectionChunk("
+                    "projection, matrix, angle_index))",
+                    DeprecationWarning, stacklevel=2)
+            chunk = ProjectionChunk(chunk, matrix, angle_index)
+        elif matrix is not None or angle_index is not None:
+            raise TypeError(
+                "submit(sid, ProjectionChunk) takes no separate matrix/"
+                "angle_index arguments")
         scan = self.scans[sid]
         if scan.done:
             raise ValueError(f"scan {sid} already finished")
-        projs = jnp.asarray(projection, jnp.float32)
-        if projs.ndim == 2:
-            projs = projs[None]
-        mats = np.asarray(matrix, np.float64).reshape(-1, 3, 4)
-        idx = np.atleast_1d(np.asarray(angle_index, np.int32))
+        projs, mats, idx = chunk.arrays()
         k = projs.shape[0]
         if mats.shape[0] != k or idx.shape != (k,):
             raise ValueError(
@@ -386,7 +445,39 @@ class ReconstructionEngine:
             raise ValueError(f"scan {sid} still active; cannot release")
         del self.scans[sid]
 
+    def abort_scan(self, sid: int) -> None:
+        """Drop scan ``sid`` mid-flight (the front door's cancel path).
+
+        Staged projections are discarded, the scan's slot (if it holds
+        one) is retired and zeroed, and the freed slot refills from the
+        admission queue immediately.  The next occupant starts from the
+        same all-zero volume a fresh slot gets, so abort-then-reuse is
+        bit-clean.  Unknown (or already-released) sids raise; aborting a
+        *finished* scan just drops its retained volume.
+        """
+        scan = self.scans.pop(sid, None)
+        if scan is None:
+            raise ValueError(f"abort_scan: unknown scan {sid}")
+        if sid in self.queue:
+            self.queue.remove(sid)
+        for slot, owner in enumerate(self.slot_scan):
+            if owner == sid:
+                self._volumes = self._volumes.at[slot].set(0.0)
+                self.slot_scan[slot] = None
+        scan.pending.clear()
+        scan.done = True
+        self.stats["aborted"] += 1
+        self._admit()
+
     @property
     def active(self) -> int:
         """Scans currently holding slots or queued."""
         return sum(s is not None for s in self.slot_scan) + len(self.queue)
+
+    @property
+    def free_slots(self) -> int:
+        """Slots an admission would get *right now* (empty slots not
+        already claimed by the engine's own FIFO queue) — the capacity
+        signal the front door's policies schedule against."""
+        empty = sum(s is None for s in self.slot_scan)
+        return max(0, empty - len(self.queue))

@@ -1,0 +1,134 @@
+"""The stable facade: ``repro.api`` and its lazy ``repro`` forwarding.
+
+Claims under test (DESIGN.md §14):
+
+* ``repro.__all__`` and ``repro.api.__all__`` are the same list, every
+  name resolves through both paths, and both paths hand back the *same*
+  object (the facade re-exports, it does not wrap).
+* Option bags on the blessed entry points are keyword-only — a
+  positional ``strategy`` is a ``TypeError``, not a silent misparse.
+* The :class:`ProjectionChunk` submit form is the one true signature;
+  the legacy positional triple still works but warns ``DeprecationWarning``
+  exactly once per process.
+"""
+
+import importlib
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+import repro.api as api
+from repro.core import Geometry
+from repro.core.phantom import make_dataset
+
+GEOM = Geometry().scaled(16, n_proj=4)
+
+
+def test_facade_all_lists_match():
+    assert repro.__all__ == api.__all__
+
+
+def test_every_name_resolves_identically_via_both_paths():
+    for name in api.__all__:
+        assert getattr(repro, name) is getattr(api, name), name
+
+
+def test_lazy_forwarding_dir_and_attribute_error():
+    assert set(api.__all__) <= set(dir(repro))
+    with pytest.raises(AttributeError, match="no attribute"):
+        repro.not_a_public_name
+
+
+def test_facade_objects_are_the_defining_modules():
+    from repro.core.backproject import reconstruct
+    from repro.dispatch import Dispatcher
+    from repro.serving.ct_frontdoor import CTFrontDoor
+    from repro.streaming import ReconstructionEngine
+
+    assert api.reconstruct is reconstruct
+    assert api.Dispatcher is Dispatcher
+    assert api.CTFrontDoor is CTFrontDoor
+    assert api.ReconstructionEngine is ReconstructionEngine
+
+
+def test_option_bags_are_keyword_only():
+    projs, mats, _ = make_dataset(GEOM)
+    filt = np.asarray(api.filter_projections(projs, GEOM))
+    with pytest.raises(TypeError):
+        api.reconstruct(filt, mats, GEOM, "strip2")   # positional strategy
+    out = np.asarray(api.reconstruct(filt, mats, GEOM, strategy="strip2"))
+    assert np.abs(out).max() > 0
+
+
+def test_import_smoke_matches_issue_acceptance():
+    mod = importlib.import_module("repro.api")
+    for name in ("reconstruct", "sharded_reconstruct",
+                 "reconstruct_shards", "ReconstructionEngine",
+                 "Dispatcher", "ExecutionPlan", "autotune"):
+        assert callable(getattr(mod, name)) or hasattr(mod, name)
+
+
+# ----------------------------------------------------------------------
+# ProjectionChunk and the deprecation shim
+# ----------------------------------------------------------------------
+
+def test_projection_chunk_normalises_single_projection():
+    from repro.api import ProjectionChunk
+
+    projs, mats, _ = make_dataset(GEOM)
+    c = ProjectionChunk(projs[2], mats[2], 2)
+    assert c.n == 1
+    p, m, idx = c.arrays()
+    assert p.shape == (1, GEOM.n_v, GEOM.n_u)
+    assert m.shape == (1, 3, 4) and idx.tolist() == [2]
+    c3 = ProjectionChunk(projs[:3], mats[:3], np.arange(3))
+    assert c3.n == 3
+
+
+def test_positional_submit_warns_deprecation_once():
+    import repro.streaming.engine as engine_mod
+    from repro.api import ProjectionChunk, ReconstructionEngine
+
+    projs, mats, _ = make_dataset(GEOM)
+    eng = ReconstructionEngine(GEOM, n_slots=1, pbatch=4)
+    sid = eng.begin_scan(n_proj=GEOM.n_proj)
+    engine_mod._POSITIONAL_SUBMIT_WARNED = False
+    with pytest.warns(DeprecationWarning, match="ProjectionChunk"):
+        eng.submit(sid, projs[:2], mats[:2], np.arange(2))
+    # Once per process: the second legacy call stays quiet.
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.submit(sid, projs[2], mats[2], 2)
+        # ...and the blessed form never warns.
+        eng.submit(sid, ProjectionChunk(projs[3], mats[3], 3))
+
+
+def test_submit_rejects_mixed_forms():
+    from repro.api import ProjectionChunk, ReconstructionEngine
+
+    projs, mats, _ = make_dataset(GEOM)
+    eng = ReconstructionEngine(GEOM, n_slots=1, pbatch=4)
+    sid = eng.begin_scan(n_proj=GEOM.n_proj)
+    chunk = ProjectionChunk(projs[:2], mats[:2], np.arange(2))
+    with pytest.raises(TypeError, match="matrix/angle_index"):
+        eng.submit(sid, chunk, mats[:2], np.arange(2))
+    with pytest.raises(TypeError):
+        eng.submit(sid, projs[:2])          # triple with no matrices
+
+
+def test_legacy_and_chunk_submissions_reconstruct_identically():
+    from repro.api import (ProjectionChunk, ReconstructionEngine,
+                           filter_projections, reconstruct)
+
+    projs, mats, _ = make_dataset(GEOM)
+    filt = np.asarray(filter_projections(projs, GEOM))
+    ref = np.asarray(reconstruct(filt, mats, GEOM, strategy="strip2"))
+    eng = ReconstructionEngine(GEOM, n_slots=1, pbatch=4)
+    sid = eng.begin_scan(n_proj=GEOM.n_proj)
+    idx = np.arange(GEOM.n_proj)
+    eng.submit(sid, ProjectionChunk(projs, mats, idx))
+    eng.drain()
+    np.testing.assert_allclose(np.asarray(eng.result(sid)), ref,
+                               atol=1e-5, rtol=1e-5)

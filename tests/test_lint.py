@@ -219,6 +219,41 @@ def test_hygiene_flags_nonhashable_static():
     assert "nonhashable-static" in found
 
 
+def test_hygiene_flags_unused_import():
+    assert _rules("""
+        import os
+        import numpy as np
+        from typing import Sequence
+        def f(x):
+            return np.asarray(x)
+        """) == ["unused-import", "unused-import"]
+
+
+def test_hygiene_unused_import_exemptions():
+    """__all__ re-exports, redundant aliases, noqa, __future__, and the
+    pragma are all deliberate — none is a finding."""
+    assert _rules("""
+        from __future__ import annotations
+        from .core import reconstruct, Geometry
+        from .tune import autotune as autotune
+        import repro.kernels  # noqa: F401 (side-effect registration)
+        import repro.serving  # lint: ok(unused-import)
+        __all__ = ["reconstruct", "Geometry"]
+        """) == []
+
+
+def test_hygiene_unused_import_sees_attribute_roots():
+    """``import a.b`` binds ``a``; use through ``a.b.c`` counts."""
+    assert _rules("""
+        import os.path
+        def f(p):
+            return os.path.join(p, "x")
+        """) == []
+    assert _rules("""
+        import os.path
+        """) == ["unused-import"]
+
+
 def test_hygiene_clean_tree_is_the_false_positive_gate():
     res = run_hygiene_pass(str(REPO / "src"))
     assert res.findings == []
